@@ -1,0 +1,137 @@
+"""Framework-side benchmarks: tiny-model train/serve throughput on CPU, the
+COAX-vs-linear-scan router comparison, and the dry-run roofline summary."""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from glob import glob
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import emit
+from repro.configs import get_config
+from repro.models import build_model
+from repro.optim import AdamWConfig, adamw_init
+from repro.runtime.router import CoaxRouter
+from repro.runtime.steps import make_train_step
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def _tiny(arch="h2o-danube-3-4b"):
+    cfg = get_config(arch)
+    return dataclasses.replace(cfg, n_layers=4, d_model=256, d_ff=512,
+                               vocab_size=2048, n_heads=8, n_kv_heads=4,
+                               head_dim=32, window=128)
+
+
+def train_throughput(steps: int = 10, batch: int = 4, seq: int = 256) -> float:
+    cfg = _tiny()
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.key(0))
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(model, AdamWConfig(lr=1e-3)))
+    rng = np.random.default_rng(0)
+    b = {"tokens": jnp.asarray(rng.integers(0, 2048, (batch, seq)), jnp.int32),
+         "labels": jnp.asarray(rng.integers(0, 2048, (batch, seq)), jnp.int32)}
+    params, opt, _ = step(params, opt, b)  # compile
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        params, opt, m = step(params, opt, b)
+    jax.block_until_ready(m["loss"])
+    dt = time.perf_counter() - t0
+    tps = steps * batch * seq / dt
+    emit("framework/train_tokens_per_s", dt / steps * 1e6,
+         f"tokens/s={tps:.0f} ({cfg.n_layers}L d{cfg.d_model} CPU)")
+    return tps
+
+
+def decode_throughput(steps: int = 20, batch: int = 8) -> float:
+    cfg = _tiny()
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.key(0))
+    cache = model.init_cache(batch, 512)
+    decode = jax.jit(model.decode_step)
+    tok = jnp.ones((batch, 1), jnp.int32)
+    logits, cache = decode(params, cache, tok, jnp.int32(0))  # compile
+    t0 = time.perf_counter()
+    for i in range(steps):
+        logits, cache = decode(params, cache, tok, jnp.int32(i + 1))
+    jax.block_until_ready(logits)
+    dt = time.perf_counter() - t0
+    emit("framework/decode_us_per_token", dt / (steps * batch) * 1e6,
+         f"batch={batch}")
+    return steps * batch / dt
+
+
+def router_comparison(n_requests: int = 4_096, n_admits: int = 40) -> dict:
+    """COAX-indexed admission vs a linear scan of the pool."""
+    rng = np.random.default_rng(3)
+    prompts = [np.ones(int(rng.integers(8, 4096)), np.int32)
+               for _ in range(n_requests)]
+
+    router = CoaxRouter(rebuild_threshold=n_requests)
+    for i, p in enumerate(prompts):
+        router.submit(p, 128, priority=float(rng.random()), arrival=float(i))
+    router._rebuild()
+    t0 = time.perf_counter()
+    got = 0
+    for j in range(n_admits):
+        lo = 64 * (j % 8)
+        got += len(router.admit(8, prompt_len_range=(lo, lo + 512)))
+    t_coax = (time.perf_counter() - t0) / n_admits * 1e6
+
+    # linear-scan reference
+    pool = [(float(i), len(p), float(rng.random())) for i, p in enumerate(prompts)]
+    t0 = time.perf_counter()
+    for j in range(n_admits):
+        lo = 64 * (j % 8)
+        hits = [r for r in pool if lo <= r[1] < lo + 512]
+        hits.sort(key=lambda r: (-r[2], r[0]))
+        hits = hits[:8]
+    t_scan = (time.perf_counter() - t0) / n_admits * 1e6
+
+    emit("framework/router_admit_coax", t_coax, f"pool={n_requests} admitted={got}")
+    emit("framework/router_admit_linear_scan", t_scan, f"pool={n_requests}")
+    return {"coax_us": t_coax, "scan_us": t_scan}
+
+
+def roofline_summary() -> dict:
+    """Aggregate the dry-run cells into the §Roofline summary rows."""
+    cells = {}
+    for f in sorted(glob(str(DRYRUN_DIR / "*baseline.json"))):
+        d = json.loads(Path(f).read_text())
+        key = (d["arch"], d["shape"], d["mesh"])
+        cells[key] = d
+    ok = [d for d in cells.values() if d.get("status") == "ok"]
+    if not ok:
+        emit("framework/dryrun_cells", 0, "no dry-run results found")
+        return {}
+    fits = sum(1 for d in ok
+               if d["memory"]["peak_bytes_per_device"] <= 16 * 2**30)
+    emit("framework/dryrun_cells_ok", len(ok),
+         f"skipped={len(cells) - len(ok)} fit_hbm={fits}")
+    for d in ok:
+        if d["mesh"] != "single":
+            continue
+        r = d["roofline"]
+        emit(f"roofline/{d['arch']}/{d['shape']}",
+             r["step_time_bound_s"] * 1e6,
+             f"dom={r['dominant']},mfu_bound={d.get('roofline_mfu_bound', 0) or 0:.3f},"
+             f"mem_gib={d['memory']['peak_bytes_per_device']/2**30:.1f}")
+    return cells
+
+
+def run() -> None:
+    train_throughput()
+    decode_throughput()
+    router_comparison()
+    roofline_summary()
+
+
+if __name__ == "__main__":
+    run()

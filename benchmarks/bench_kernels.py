@@ -1,0 +1,68 @@
+"""Kernel-layer microbenchmarks (paper §6 scan / §5 bucketing hot loops).
+
+Interpret-mode Pallas is a CPU correctness harness, not a fast path, so the
+throughput numbers here time the jnp oracle (XLA-compiled, identical math)
+and the equivalent numpy engine path; the Pallas kernels are asserted
+equivalent on a sample then timed separately so their interpret-mode cost is
+visible but not confused with device throughput.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import emit
+from repro.kernels import bucket_histogram, range_scan_query, split_by_margin
+
+
+def _time(fn, *args, repeats=5, **kw):
+    fn(*args, **kw)  # compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeats * 1e6
+
+
+def run(n: int = 1_000_000) -> dict:
+    rng = np.random.default_rng(0)
+    out = {}
+
+    # range_scan: D=8 column-major block
+    rows = rng.normal(0, 5, (8, n)).astype(np.float32)
+    lo = np.full(8, -4, np.float32)
+    hi = np.full(8, 4, np.float32)
+    us_ref = _time(lambda: range_scan_query(rows, lo, hi, use_pallas=False)[0])
+    out["range_scan_ref"] = us_ref
+    emit("kernels/range_scan/jnp_oracle", us_ref, f"n={n} rows, D=8")
+    c1, m1 = range_scan_query(rows[:, :8192], lo, hi, use_pallas=True)
+    c2, m2 = range_scan_query(rows[:, :8192], lo, hi, use_pallas=False)
+    assert int(c1) == int(c2)
+    us_pal = _time(lambda: range_scan_query(rows[:, :8192], lo, hi,
+                                            use_pallas=True)[0], repeats=2)
+    emit("kernels/range_scan/pallas_interpret", us_pal, "n=8192 (correctness mode)")
+
+    # grid_histogram (Alg. 1 bucketing)
+    x = rng.normal(0, 3, n).astype(np.float32)
+    d = rng.gamma(2.0, 2.0, n).astype(np.float32)
+    us_h = _time(lambda: bucket_histogram(x, d, buckets=64, use_pallas=False))
+    out["grid_histogram_ref"] = us_h
+    emit("kernels/grid_histogram/jnp_oracle", us_h, f"n={n}, 64x64")
+    h1 = bucket_histogram(x[:8192], d[:8192], buckets=64, use_pallas=True)
+    h2 = bucket_histogram(x[:8192], d[:8192], buckets=64, use_pallas=False)
+    assert float(jnp.abs(h1 - h2).max()) == 0.0
+
+    # margin_split (Alg. 1 split)
+    dd = (2.0 * x + 5 + rng.normal(0, 2, n)).astype(np.float32)
+    us_m = _time(lambda: split_by_margin(x, dd, 2.0, 5.0, 4.0, 4.0,
+                                         use_pallas=False)[1])
+    out["margin_split_ref"] = us_m
+    emit("kernels/margin_split/jnp_oracle", us_m, f"n={n}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

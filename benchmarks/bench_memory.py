@@ -1,0 +1,76 @@
+"""Fig. 8: range-query runtime vs index memory footprint.
+
+Sweeps the per-index resolution knob (cells_per_dim / R-tree node size) and
+reports (memory_bytes, us_per_query) pairs — the tradeoff curves whose gap
+is the paper's four-orders-of-magnitude headline.  Table 1's dataset
+statistics are also reproduced here (primary ratios, detected groups).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import PCFG, dataset, emit, queries, time_queries
+from repro.core import COAXIndex, CoaxConfig, ColumnFiles, STRTree, UniformGrid
+
+
+def run(rows: int = None, n_queries: int = 80) -> dict:
+    rows = rows or PCFG.airline_rows
+    ds = dataset("airline", rows)
+    rects = queries("airline", rows, n_queries, PCFG.knn_k)
+    out = {}
+
+    sweeps = {
+        "coax": [4, 8, 16, 32, 64],
+        "column_files": [2, 3, 4, 6, 8],
+        "uniform_grid": [2, 3, 4, 6, 8],
+        "r_tree": [6, 10, 16, 32],
+    }
+    for name, knob_vals in sweeps.items():
+        best = None
+        for v in knob_vals:
+            if name == "coax":
+                eng = COAXIndex(ds.data, CoaxConfig(primary_cells_per_dim=v))
+            elif name == "column_files":
+                eng = ColumnFiles(ds.data, cells_per_dim=v)
+            elif name == "uniform_grid":
+                eng = UniformGrid(ds.data, cells_per_dim=v)
+            else:
+                eng = STRTree(ds.data, leaf_cap=v, node_cap=v)
+            us, _ = time_queries(eng, rects)
+            mem = eng.memory_footprint()
+            out[(name, v)] = {"us": us, "bytes": mem}
+            emit(f"fig8/{name}/knob={v}", us, f"mem_bytes={mem}")
+            if best is None or us < best[0]:
+                best = (us, mem, v)
+        out[(name, "best")] = {"us": best[0], "bytes": best[1], "knob": best[2]}
+        emit(f"fig8/{name}/best", best[0], f"mem_bytes={best[1]},knob={best[2]}")
+
+    # headline: memory ratio at each index's best-latency point
+    ratio = out[("uniform_grid", "best")]["bytes"] / max(out[("coax", "best")]["bytes"], 1)
+    emit("fig8/memory_ratio_uniform_vs_coax_at_best", ratio, "x (paper: ~1e4)")
+    return out
+
+
+def table1(rows: int = None) -> dict:
+    """Table 1: dataset characteristics + what COAX detects."""
+    rows = rows or PCFG.airline_rows
+    out = {}
+    for name in ("airline", "osm"):
+        ds = dataset(name, rows)
+        t0 = time.time()
+        cx = COAXIndex(ds.data)
+        build = time.time() - t0
+        d = cx.describe()
+        out[name] = d
+        emit(f"table1/{name}/primary_ratio", d["primary_ratio"] * 100, "%")
+        emit(f"table1/{name}/indexed_dims", len(d["indexed_dims"]),
+             f"groups={[(g['predictor'], g['dependents']) for g in d['groups']]}")
+        emit(f"table1/{name}/build_s", build, f"rows={rows}")
+    return out
+
+
+if __name__ == "__main__":
+    run()
+    table1()

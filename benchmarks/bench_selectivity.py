@@ -1,0 +1,29 @@
+"""Fig. 7: range-query runtime vs selectivity (airline year-2008 slice).
+
+Selectivity is driven by the KNN neighbourhood size K (paper §8.1.2): the
+paper sweeps range queries of growing result size on the 7M-row 2008 slice.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import PCFG, build_engines, dataset, emit, queries, time_queries
+
+
+def run(rows: int = None, n_queries: int = 60) -> dict:
+    rows = rows or PCFG.airline_2008_rows
+    ds = dataset("airline2008", rows)
+    engines = build_engines(ds.data)
+    out = {}
+    for k in PCFG.selectivities:
+        rects = queries("airline2008", rows, n_queries, k, seed=PCFG.seed + k)
+        for name, (eng, _) in engines.items():
+            us, n_res = time_queries(eng, rects)
+            sel = n_res / (n_queries * rows)
+            out[(k, name)] = {"us": us, "selectivity": sel}
+            emit(f"fig7/k={k}/{name}", us, f"selectivity={sel:.5f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

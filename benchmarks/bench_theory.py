@@ -1,0 +1,47 @@
+"""§7 theory validation: Eq. 5 effectiveness, Thm 7.1 MET, Thm 7.3 variance,
+Thm 7.4 segment counts — closed forms vs Monte-Carlo simulation."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import emit
+from repro.core import theory
+
+
+def run() -> dict:
+    out = {}
+    # Eq. 5: effectiveness vs margin width
+    for eps in (0.1, 0.5, 1.0, 2.0, 5.0):
+        e = theory.effectiveness(q_y=5.0, eps=eps)
+        out[("eff", eps)] = e
+        emit(f"theory/eq5/eps={eps}", e * 100, "% effectiveness (q_y=5)")
+
+    # Thm 7.1 / 7.3: MET mean + variance vs simulation
+    for eps, sigma in ((10.0, 1.0), (20.0, 1.0), (8.0, 0.5)):
+        mean, var = theory.simulate_met(eps, sigma, trials=1_500, seed=11)
+        t_mean = theory.met_expectation(eps, sigma)
+        t_var = theory.met_variance(eps, sigma)
+        out[("met", eps, sigma)] = (mean, t_mean, var, t_var)
+        emit(f"theory/thm7.1/eps={eps},sigma={sigma}", mean,
+             f"theory={t_mean:.0f} rel_err={(mean - t_mean) / t_mean:+.2%}")
+        emit(f"theory/thm7.3/eps={eps},sigma={sigma}", var,
+             f"theory={t_var:.0f} rel_err={(var - t_var) / t_var:+.2%}")
+
+    # Thm 7.2: slope = mu maximises coverage
+    best = theory.met_drifted_expectation(8.0, 1.0, 0.0)
+    off = theory.met_drifted_expectation(8.0, 1.0, 0.3)
+    emit("theory/thm7.2/drift_penalty", best / off, "x coverage at optimal slope")
+
+    # Thm 7.4: segments to cover a stream
+    rng = np.random.default_rng(13)
+    n, sigma, eps = 300_000, 1.0, 12.0
+    gaps = rng.normal(5.0, sigma, n)
+    segs = theory.greedy_segment_count(gaps, eps)
+    t_segs = theory.expected_segments(n, eps, sigma)
+    out["segments"] = (segs, t_segs)
+    emit("theory/thm7.4/segments", segs, f"theory={t_segs:.0f} n={n}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

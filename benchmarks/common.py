@@ -1,0 +1,72 @@
+"""Shared benchmark machinery: timed query loops, dataset cache, CSV rows."""
+from __future__ import annotations
+
+import functools
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+from repro.configs.paper_coax import CONFIG as PCFG  # noqa: E402
+from repro.core import COAXIndex, ColumnFiles, FullScan, STRTree, UniformGrid  # noqa: E402
+from repro.data import knn_rect_queries, make_airline, make_osm  # noqa: E402
+
+ROWS = []  # (name, us_per_call, derived)
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.2f},{derived}")
+
+
+@functools.lru_cache(maxsize=None)
+def dataset(name: str, rows: int, seed: int = PCFG.seed):
+    if name == "airline":
+        return make_airline(rows, seed=seed)
+    if name == "airline2008":
+        return make_airline(rows, seed=seed + 13)
+    if name == "osm":
+        return make_osm(rows, seed=seed)
+    raise KeyError(name)
+
+
+@functools.lru_cache(maxsize=None)
+def queries(ds_name: str, rows: int, n: int, k: int, seed: int = PCFG.seed):
+    ds = dataset(ds_name, rows)
+    q = knn_rect_queries(ds.data, n, k, seed=seed, sample_cap=100_000)
+    q.setflags(write=False)
+    return q
+
+
+def build_engines(data: np.ndarray, which=("coax", "uniform_grid",
+                                           "column_files", "r_tree", "full_scan")):
+    out = {}
+    for w in which:
+        t0 = time.time()
+        if w == "coax":
+            out[w] = (COAXIndex(data), time.time() - t0)
+        elif w == "uniform_grid":
+            out[w] = (UniformGrid(data), time.time() - t0)
+        elif w == "column_files":
+            out[w] = (ColumnFiles(data), time.time() - t0)
+        elif w == "r_tree":
+            out[w] = (STRTree(data, node_cap=PCFG.rtree_node_cap), time.time() - t0)
+        elif w == "full_scan":
+            out[w] = (FullScan(data), time.time() - t0)
+    return out
+
+
+def time_queries(engine, rects, repeats: int = 1):
+    """Returns (us_per_query, total_results)."""
+    total = 0
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        for r in rects:
+            total += engine.query(r).size
+    dt = time.perf_counter() - t0
+    return dt / (len(rects) * repeats) * 1e6, total // repeats

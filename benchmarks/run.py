@@ -1,0 +1,36 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark driver: runs every paper-figure benchmark plus the framework
+benchmarks.  ``--quick`` shrinks datasets for CI-scale runs; the defaults
+match configs/paper_coax.py (2M-row generators standing in for the paper's
+80M/105M, scaled for a CPU container — pass --rows to go bigger)."""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced rows/queries for smoke runs")
+    ap.add_argument("--rows", type=int, default=None)
+    args = ap.parse_args()
+
+    from . import (bench_framework, bench_kernels, bench_memory,
+                   bench_queries, bench_selectivity, bench_theory)
+
+    rows = args.rows or (200_000 if args.quick else None)
+    nq = 40 if args.quick else None
+
+    print("name,us_per_call,derived")
+    bench_queries.run(rows=rows, n_queries=nq)
+    bench_selectivity.run(rows=(rows or None), n_queries=(20 if args.quick else 60))
+    bench_memory.run(rows=rows, n_queries=(20 if args.quick else 80))
+    bench_memory.table1(rows=rows)
+    bench_theory.run()
+    bench_kernels.run(n=100_000 if args.quick else 1_000_000)
+    bench_framework.run()
+
+
+if __name__ == "__main__":
+    main()

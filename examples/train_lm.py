@@ -1,0 +1,72 @@
+"""End-to-end training driver: COAX-curated data -> sharded loader ->
+fault-tolerant train loop with checkpointing.
+
+    PYTHONPATH=src python examples/train_lm.py                  # quick preset
+    PYTHONPATH=src python examples/train_lm.py --preset 130m --steps 300
+
+The quick preset (default) trains a ~10M-param danube-style model for 200
+steps in a few minutes on CPU; ``--preset 130m`` selects the full
+mamba2-130m assigned config (a ~100M-class model) — same code path, more
+compute.  On a real cluster the identical script runs under
+launch/mesh.make_production_mesh with the dry-run's shardings.
+"""
+import argparse
+import dataclasses
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.configs import get_config
+from repro.data.curation import CuratedSelector, MetaQuery
+from repro.data.pipeline import ShardedLoader, make_corpus
+from repro.models import build_model
+from repro.optim import AdamWConfig
+from repro.runtime.train_loop import TrainLoopConfig, train
+
+
+def make_model(preset: str):
+    if preset == "130m":
+        return build_model(get_config("mamba2-130m"))
+    cfg = dataclasses.replace(
+        get_config("h2o-danube-3-4b"),
+        n_layers=4, d_model=256, d_ff=768, vocab_size=8192,
+        n_heads=8, n_kv_heads=4, head_dim=32, window=256)
+    return build_model(cfg)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=["quick", "130m"], default="quick")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    args = ap.parse_args()
+
+    model = make_model(args.preset)
+    vocab = model.cfg.padded_vocab
+    print(f"model: {model.cfg.name} ({model.param_count()/1e6:.1f}M params)")
+
+    # COAX-curated corpus: select mid-length, high-quality documents through
+    # the paper's index (the data-plane integration, DESIGN.md §2).
+    corpus = make_corpus(30_000, vocab_size=min(vocab, 32_000), seed=0)
+    sel = CuratedSelector(corpus)
+    docs = sel.select(MetaQuery(token_len=(256, 8192), quality=(0.5, 1.1)))
+    print(f"curation: {docs.size:,}/{corpus.meta.shape[0]:,} docs selected "
+          f"via COAX ({sel.build_time*1e3:.0f} ms build)")
+
+    loader = ShardedLoader(corpus, batch_size=args.batch, seq_len=args.seq,
+                           doc_ids=docs, seed=1)
+    out = train(
+        model, iter(loader), AdamWConfig(lr=1e-3),
+        TrainLoopConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
+                        ckpt_every=50, log_every=10, warmup=20))
+    loader.close()
+    print(f"done: {out['final_step']} steps, final loss "
+          f"{out['history'][-1]['loss']:.4f}, restarts={out['restarts']}, "
+          f"stragglers={len(out['stragglers'])}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Regenerate the §Roofline table inside EXPERIMENTS.md from the dry-run
+JSONs (idempotent: replaces the block between the table header and the
+'Reading the table' marker)."""
+import io
+import re
+import sys
+from contextlib import redirect_stdout
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.argv = ["report", "--mesh", "single"]
+from repro.launch import report  # noqa: E402
+
+buf = io.StringIO()
+with redirect_stdout(buf):
+    report.main()
+tbl = buf.getvalue().strip()
+
+md_path = Path(__file__).resolve().parents[1] / "EXPERIMENTS.md"
+md = md_path.read_text()
+start = md.index("| arch | shape | mesh |")
+end = md.index("Reading the table:")
+md = md[:start] + tbl + "\n\n" + md[end:]
+md_path.write_text(md)
+print("spliced", len(tbl.splitlines()), "table lines")

@@ -1,0 +1,64 @@
+"""COAX core: the paper's contribution as a composable library.
+
+Public API
+----------
+COAXIndex / CoaxConfig       — the correlation-aware index (paper §3-§6)
+learn_soft_fds / SoftFDConfig — soft-FD detection & model learning (§5, Alg. 1)
+translate_rect               — query translation (Eq. 2)
+GridFile                     — quantile grid file with sorted dim (§6)
+FullScan/UniformGrid/ColumnFiles/STRTree — evaluation baselines (§8.1.3)
+theory                       — §7 closed forms + simulations
+"""
+from .types import (
+    FDGroup,
+    FDPair,
+    LinearModel,
+    Rect,
+    full_rect,
+    point_rect,
+    rect_contains,
+)
+from .softfd import (
+    BayesianLinearModel,
+    SoftFDConfig,
+    bayes_linear_regress,
+    bucket_centres,
+    detect_soft_fds,
+    learn_soft_fds,
+    merge_groups,
+)
+from .translate import reduced_dims, translate_dependent_interval, translate_rect
+from .gridfile import GridFile, fit_cells_per_dim, gather_ranges
+from .baselines import ColumnFiles, FullScan, STRTree, UniformGrid
+from .coax import COAXIndex, CoaxConfig
+from . import theory
+
+__all__ = [
+    "COAXIndex",
+    "CoaxConfig",
+    "SoftFDConfig",
+    "BayesianLinearModel",
+    "LinearModel",
+    "FDPair",
+    "FDGroup",
+    "Rect",
+    "full_rect",
+    "point_rect",
+    "rect_contains",
+    "bucket_centres",
+    "bayes_linear_regress",
+    "detect_soft_fds",
+    "merge_groups",
+    "learn_soft_fds",
+    "translate_rect",
+    "translate_dependent_interval",
+    "reduced_dims",
+    "GridFile",
+    "gather_ranges",
+    "fit_cells_per_dim",
+    "FullScan",
+    "UniformGrid",
+    "ColumnFiles",
+    "STRTree",
+    "theory",
+]

@@ -1,0 +1,160 @@
+"""The COAX index (paper §3, Fig. 1): soft-FD learning + query translation +
+primary index on reduced dims + full-dimensional outlier index.
+
+Build path (``COAXIndex.fit``):
+  1. learn soft-FD groups from a sample (Alg. 1; ``softfd.learn_soft_fds``);
+  2. split rows: every group's margins satisfied -> primary, else -> outlier
+     (Alg. 1, second half);
+  3. primary = grid file over only the INDEXED dims (non-dependents) with an
+     in-cell sorted dim -> ``n - m - 1`` grid dimensions (§6);
+  4. outliers = an ordinary full-dimensional multidimensional index (§3:
+     'a typical multidimensional index structure') — quantile grid here.
+
+Query path (``COAXIndex.query``):
+  translate the rect onto indexed dims (Eq. 2), probe the primary with the
+  translated nav-rect plus the ORIGINAL full predicate, probe the outlier
+  index with the original rect, union row ids.  §8.2.3's optimisation is
+  applied: each sub-index is only invoked when the query can intersect it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from .gridfile import GridFile, fit_cells_per_dim
+from .softfd import SoftFDConfig, learn_soft_fds
+from .translate import reduced_dims, translate_rect
+from .types import FDGroup, Rect, full_rect, rect_contains
+
+__all__ = ["CoaxConfig", "COAXIndex"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CoaxConfig:
+    softfd: SoftFDConfig = SoftFDConfig()
+    primary_cells_per_dim: Optional[int] = None   # None -> auto from rows_per_cell
+    outlier_cells_per_dim: Optional[int] = None
+    sort_dim: Optional[int] = None                # None -> auto (widest kept dim)
+    rows_per_cell: int = 256                      # target cell occupancy (sweet
+                                                  # spot lever, paper Fig. 8)
+    directory_budget_frac: float = 1.0            # directory <= frac * data bytes
+
+
+class COAXIndex:
+    name = "coax"
+
+    def __init__(self, data: np.ndarray, config: CoaxConfig = CoaxConfig(),
+                 groups: Optional[Sequence[FDGroup]] = None):
+        """Build the index.  ``groups`` may be supplied to skip detection
+        (e.g. when the DBA already knows the FDs, or from a previous fit)."""
+        self.config = config
+        self.data = np.ascontiguousarray(data, dtype=np.float32)
+        self.n_rows, self.n_dims = self.data.shape
+        self.groups: List[FDGroup] = (
+            list(groups) if groups is not None else learn_soft_fds(self.data, config.softfd)
+        )
+        self.keep_dims = reduced_dims(self.n_dims, self.groups)
+        self._fit()
+
+    # ------------------------------------------------------------------ #
+    def _fit(self) -> None:
+        cfg = self.config
+        # Split into primary (all groups' margins hold) and outliers.
+        inlier = np.ones(self.n_rows, dtype=bool)
+        for g in self.groups:
+            inlier &= g.inlier_mask(self.data)
+        self.primary_ratio = float(inlier.mean()) if self.n_rows else 0.0
+
+        ids = np.arange(self.n_rows, dtype=np.int64)
+        p_rows, p_ids = self.data[inlier], ids[inlier]
+        o_rows, o_ids = self.data[~inlier], ids[~inlier]
+
+        # Sorted dim: the kept dim with the widest normalised spread by
+        # default — maximises the benefit of in-cell binary search.
+        if cfg.sort_dim is not None:
+            sort_dim = cfg.sort_dim
+        else:
+            spread = [
+                float(np.std(self.data[:, d])) / (float(np.ptp(self.data[:, d])) or 1.0)
+                for d in self.keep_dims
+            ]
+            sort_dim = self.keep_dims[int(np.argmax(spread))] if self.keep_dims else 0
+
+        budget_cells = max(int(self.data.nbytes * cfg.directory_budget_frac) // 8, 1)
+        n_grid = max(len(self.keep_dims) - 1, 0)
+        target = max(int(p_rows.shape[0] / cfg.rows_per_cell), 1)
+        auto = max(int(round(target ** (1.0 / max(n_grid, 1)))), 2)
+        p_cells = cfg.primary_cells_per_dim or min(
+            auto, fit_cells_per_dim(max(n_grid, 1), budget_cells))
+        self.primary = GridFile(
+            p_rows, index_dims=self.keep_dims, cells_per_dim=p_cells,
+            sort_dim=sort_dim if self.keep_dims else None, quantile=True, row_ids=p_ids,
+        )
+
+        # Outlier index: full-dimensional quantile grid with its own (much
+        # smaller) budget — outliers are typically a few % of rows.
+        o_budget = max(int(o_rows.nbytes * cfg.directory_budget_frac) // 8, 1)
+        o_target = max(int(o_rows.shape[0] / cfg.rows_per_cell), 1)
+        o_auto = max(int(round(o_target ** (1.0 / max(self.n_dims - 1, 1)))), 2)
+        o_cells = cfg.outlier_cells_per_dim or min(
+            o_auto, fit_cells_per_dim(max(self.n_dims - 1, 1), o_budget))
+        self.outlier = GridFile(
+            o_rows, index_dims=list(range(self.n_dims)), cells_per_dim=o_cells,
+            sort_dim=sort_dim, quantile=True, row_ids=o_ids,
+        )
+
+        # Bounding box of outliers lets us skip the outlier probe entirely
+        # for queries that cannot touch it (§8.2.3).
+        if o_rows.shape[0]:
+            self._outlier_lo = o_rows.min(axis=0)
+            self._outlier_hi = o_rows.max(axis=0)
+        else:
+            self._outlier_lo = None
+
+    # ------------------------------------------------------------------ #
+    def translate(self, rect: Rect) -> np.ndarray:
+        """Eq. 2 translation of a full rect onto the indexed dims."""
+        return translate_rect(rect, self.groups, self.keep_dims)
+
+    def query(self, rect: Rect) -> np.ndarray:
+        rect = np.asarray(rect, dtype=np.float64)
+        nav = self.translate(rect)
+        hits = [self.primary.query(nav, rect)]
+        if self._outlier_lo is not None and bool(
+            np.all((rect[:, 0] < self._outlier_hi) & (rect[:, 1] > self._outlier_lo))
+        ):
+            o_nav = rect.copy()
+            hits.append(self.outlier.query(o_nav, rect))
+        out = np.concatenate(hits) if len(hits) > 1 else hits[0]
+        return np.sort(out)
+
+    # ------------------------------------------------------------------ #
+    def memory_footprint(self) -> int:
+        """Directory bytes: both grids + the soft-FD model parameters."""
+        model_bytes = sum(len(g.dependents) * 4 * 8 + 8 for g in self.groups)
+        return self.primary.memory_footprint() + self.outlier.memory_footprint() + model_bytes
+
+    def describe(self) -> dict:
+        return {
+            "n_rows": self.n_rows,
+            "n_dims": self.n_dims,
+            "groups": [
+                {
+                    "predictor": g.predictor,
+                    "dependents": list(g.dependents),
+                    "models": {
+                        int(d): dataclasses.asdict(m) for d, m in g.models.items()
+                    },
+                }
+                for g in self.groups
+            ],
+            "indexed_dims": self.keep_dims,
+            "grid_dims": self.primary.grid_dims,
+            "sort_dim": self.primary.sort_dim,
+            "primary_ratio": self.primary_ratio,
+            "primary_cells": self.primary.n_cells,
+            "outlier_cells": self.outlier.n_cells,
+            "memory_footprint_bytes": self.memory_footprint(),
+        }

@@ -1,0 +1,75 @@
+"""COAX-indexed data curation: the paper's index as a first-class feature of
+the training data plane (DESIGN.md §2).
+
+Sample-selection queries in production pipelines are multidimensional range
+queries over document metadata — "length in [1k, 8k), quality > 0.8,
+crawled after T, domain in {...}" — exactly the workload COAX accelerates.
+The metadata columns carry natural soft FDs (byte_len ~ token_len,
+compute_cost ~ token_len, timestamp ~ doc_id), so COAX indexes fewer
+dimensions than a conventional grid and answers curriculum/filter queries
+with the paper's memory/latency profile.
+
+``CuratedSelector`` returns doc-id sets consumable by data.pipeline's
+ShardedLoader — the full path data -> COAX -> loader -> train loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core import COAXIndex, CoaxConfig, FullScan, full_rect
+from .pipeline import DocCorpus
+
+__all__ = ["CuratedSelector", "MetaQuery"]
+
+
+@dataclasses.dataclass
+class MetaQuery:
+    """Half-open constraints on named metadata columns."""
+    token_len: Optional[Tuple[float, float]] = None
+    byte_len: Optional[Tuple[float, float]] = None
+    compute_cost: Optional[Tuple[float, float]] = None
+    timestamp: Optional[Tuple[float, float]] = None
+    doc_id: Optional[Tuple[float, float]] = None
+    domain_id: Optional[Tuple[float, float]] = None
+    quality: Optional[Tuple[float, float]] = None
+
+    def rect(self, corpus: DocCorpus) -> np.ndarray:
+        r = full_rect(len(corpus.META_COLS))
+        for i, name in enumerate(corpus.META_COLS):
+            bounds = getattr(self, name, None)
+            if bounds is not None:
+                r[i, 0], r[i, 1] = bounds
+        return r
+
+
+class CuratedSelector:
+    """COAX index over corpus metadata with a full-scan reference engine."""
+
+    def __init__(self, corpus: DocCorpus, config: CoaxConfig = CoaxConfig()):
+        self.corpus = corpus
+        t0 = time.time()
+        self.index = COAXIndex(corpus.meta, config)
+        self.build_time = time.time() - t0
+        self.reference = FullScan(corpus.meta)
+
+    def select(self, query: MetaQuery) -> np.ndarray:
+        """Doc ids matching the query (sorted)."""
+        return self.index.query(query.rect(self.corpus))
+
+    def select_reference(self, query: MetaQuery) -> np.ndarray:
+        return self.reference.query(query.rect(self.corpus))
+
+    def describe(self) -> Dict:
+        d = self.index.describe()
+        d["build_time_s"] = self.build_time
+        d["meta_cols"] = list(self.corpus.META_COLS)
+        return d
+
+    def curriculum(self, stages: Sequence[MetaQuery]) -> Dict[int, np.ndarray]:
+        """Resolve a staged curriculum (e.g. short->long documents) into
+        per-stage doc-id sets via the index."""
+        return {i: self.select(q) for i, q in enumerate(stages)}

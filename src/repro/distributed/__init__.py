@@ -1,0 +1,16 @@
+from .partitioning import (
+    DEFAULT_RULES,
+    SP_RULES,
+    LogicalRules,
+    get_rules,
+    logical_to_spec,
+    rules_for_mesh,
+    set_rules,
+    shard,
+    use_rules,
+)
+
+__all__ = [
+    "DEFAULT_RULES", "SP_RULES", "LogicalRules", "get_rules",
+    "logical_to_spec", "rules_for_mesh", "set_rules", "shard", "use_rules",
+]

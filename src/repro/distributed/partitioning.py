@@ -1,0 +1,142 @@
+"""Logical-axis partitioning (MaxText-style rules).
+
+Model code annotates every parameter and key activation with LOGICAL axis
+names ("batch", "heads", "ff", ...).  A rules table maps logical names to
+mesh axes; ``logical_to_spec`` builds PartitionSpecs and ``shard`` applies
+``with_sharding_constraint`` — or is a no-op when no rules are active, so the
+same model code runs single-device smoke tests and 512-chip dry-runs.
+
+Rules are installed via ``use_rules`` (context manager) or ``set_rules``.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+__all__ = [
+    "LogicalRules",
+    "DEFAULT_RULES",
+    "SP_RULES",
+    "rules_for_mesh",
+    "set_rules",
+    "get_rules",
+    "use_rules",
+    "logical_to_spec",
+    "shard",
+]
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+LogicalRules = Dict[str, MeshAxes]
+
+# Baseline DP+TP rules for the production meshes (launch/mesh.py):
+#   single-pod ("data", "model"); multi-pod adds a leading "pod" axis that the
+#   mesh-aware helpers fold into the batch axes at dry-run time.
+DEFAULT_RULES: LogicalRules = {
+    "batch": ("data",),
+    "seq": None,            # sequence replicated (no SP) by default
+    "attn_seq": None,       # seq sharding INSIDE attention (context parallel)
+                            # — used instead of "heads" when heads % tp != 0
+    "mlp_seq": None,        # seq inside the FFN: gathered when ff is sharded
+                            # (Megatron SP semantics)
+    "logit_seq": None,      # seq at the unembed: gathered when vocab sharded
+    "embed": None,
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": None,
+    "ff": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),  # EP when n_experts divides the model axis
+    "expert_ff": None,      # MoE fallback: ff sharding inside each expert
+    "moe_capacity": ("data",),  # capacity dim of (E, C, d) dispatch buffers
+                            # follows the batch axes (C ~ tokens)
+    "ssm_inner": ("model",),
+    "ssm_state": None,
+    "layers": None,         # stacked-scan leading axis is never sharded
+    "kv_len": None,
+    "q_lora": None,
+    "kv_lora": None,
+}
+
+# Sequence-parallel variant: activations' seq axis sharded over "model" in
+# the norm/residual regions (attention/FFN re-gather via their own specs).
+SP_RULES: LogicalRules = dict(DEFAULT_RULES, seq=("model",))
+
+def rules_for_mesh(mesh, *, sequence_parallel: bool = False,
+                   expert_parallel: bool = True) -> LogicalRules:
+    """Rules adapted to a concrete mesh.
+
+    * multi-pod meshes fold the leading "pod" axis into the batch sharding
+      (pods are outer data parallelism; gradients cross DCN once per step);
+    * ``sequence_parallel`` shards the activations' seq axis over "model";
+    * ``expert_parallel=False`` forces MoE to TP (ff inside each expert).
+    """
+    rules = dict(SP_RULES if sequence_parallel else DEFAULT_RULES)
+    if "pod" in getattr(mesh, "axis_names", ()):
+        rules["batch"] = ("pod", "data")
+    if not expert_parallel:
+        rules["experts"] = None
+        rules["expert_ff"] = ("model",)
+    return rules
+
+
+_state = threading.local()
+
+
+def set_rules(rules: Optional[LogicalRules]) -> None:
+    _state.rules = rules
+
+
+def get_rules() -> Optional[LogicalRules]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[LogicalRules]):
+    prev = get_rules()
+    set_rules(rules)
+    try:
+        yield
+    finally:
+        set_rules(prev)
+
+
+def _flatten(axes: MeshAxes):
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        return axes
+    if len(axes) == 0:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def logical_to_spec(logical_axes: Sequence[Optional[str]],
+                    rules: Optional[LogicalRules] = None) -> P:
+    """Map a tuple of logical axis names to a PartitionSpec."""
+    rules = rules if rules is not None else get_rules()
+    if rules is None:
+        return P()
+    out = []
+    for name in logical_axes:
+        if name is None:
+            out.append(None)
+        else:
+            out.append(_flatten(rules.get(name)))
+    return P(*out)
+
+
+def shard(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """Constrain ``x`` to the sharding implied by its logical axes.
+
+    No-op when rules are inactive (single-device tests) so model code stays
+    identical across environments.
+    """
+    rules = get_rules()
+    if rules is None:
+        return x
+    spec = logical_to_spec(logical_axes, rules)
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,102 @@
+"""Pipeline parallelism: GPipe-style microbatched execution via shard_map +
+collective_permute over a "stage" mesh axis.
+
+Each device (stage) holds one contiguous slice of layers.  Microbatches
+stream through: at tick t, stage s computes microbatch (t - s) and passes
+its activation to stage s+1 with ``ppermute``.  Total ticks =
+n_microbatches + n_stages - 1; bubble fraction = (S-1)/(M+S-1).
+
+This is an opt-in distribution mode (config ``pipeline_stages > 1``); the
+production dry-run meshes use DP x TP where PP is unnecessary at 256-512
+chips, but the mechanism is required for >1k-chip scale-out (DESIGN.md §6)
+and is tested on a local multi-device mesh in tests/test_distributed.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["pipeline_forward", "bubble_fraction"]
+
+
+def bubble_fraction(n_stages: int, n_microbatches: int) -> float:
+    return (n_stages - 1) / (n_microbatches + n_stages - 1)
+
+
+def pipeline_forward(
+    stage_fn: Callable[[Any, jax.Array], jax.Array],
+    stage_params: Any,
+    x: jax.Array,
+    mesh,
+    *,
+    n_microbatches: int,
+    axis: str = "stage",
+) -> jax.Array:
+    """Run ``stage_fn`` over ``n_stages`` pipeline stages.
+
+    stage_params: pytree whose leaves have leading dim n_stages (stage-major)
+        — sharded so each device holds ITS stage's slice.
+    x: (batch, ...) global input; batch % n_microbatches == 0.
+    Returns the final-stage output with the same global shape as ``x``
+    (as transformed by the stages, which must preserve shape).
+    """
+    n_stages = mesh.shape[axis]
+    b = x.shape[0]
+    assert b % n_microbatches == 0, (b, n_microbatches)
+    mb = b // n_microbatches
+
+    def per_stage(params_s, x_all):
+        # params_s: this stage's params (leading stage dim of size 1)
+        params_s = jax.tree.map(lambda a: a[0], params_s)
+        stage_id = jax.lax.axis_index(axis)
+        micro = x_all.reshape(n_microbatches, mb, *x_all.shape[1:])
+
+        n_ticks = n_microbatches + n_stages - 1
+        buf = jnp.zeros_like(micro[0])          # activation arriving this tick
+        outs = jnp.zeros_like(micro)
+
+        def tick(carry, t):
+            buf, outs = carry
+            # stage 0 ingests microbatch t from its local input copy
+            feed = jnp.where(t < n_microbatches, t, 0)
+            inject = micro[feed]
+            cur_in = jnp.where(stage_id == 0, inject, buf)
+            # compute only when a real microbatch occupies this stage
+            live = (t - stage_id >= 0) & (t - stage_id < n_microbatches)
+            y = stage_fn(params_s, cur_in)
+            y = jnp.where(live, y, jnp.zeros_like(y))
+            # last stage records its completed microbatch
+            done_idx = jnp.clip(t - (n_stages - 1), 0, n_microbatches - 1)
+            record = live & (stage_id == n_stages - 1)
+            outs = jax.lax.cond(
+                record,
+                lambda o: o.at[done_idx].set(y),
+                lambda o: o,
+                outs)
+            # pass activations forward one stage
+            nxt = jax.lax.ppermute(
+                y, axis, [(i, (i + 1) % n_stages) for i in range(n_stages)])
+            return (nxt, outs), None
+
+        (buf, outs), _ = jax.lax.scan(tick, (buf, outs), jnp.arange(n_ticks))
+        # every stage returns outs; only the last stage's is real — share it
+        outs = jax.lax.ppermute(
+            outs, axis,
+            [( (n_stages - 1 + i) % n_stages, i) for i in range(n_stages)])
+        # after permute, every stage holds a copy rotated from the last stage;
+        # stage 0's copy is the true result (broadcast convention)
+        return outs.reshape(b, *x_all.shape[1:])
+
+    from jax.experimental.shard_map import shard_map
+    fn = shard_map(
+        per_stage, mesh=mesh,
+        in_specs=(P(axis), P()),       # params stage-sharded, x replicated
+        out_specs=P(),                 # result replicated
+        check_rep=False,
+    )
+    return fn(stage_params, x)

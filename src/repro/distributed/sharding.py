@@ -1,0 +1,150 @@
+"""Per-architecture sharding policy.
+
+``rules_for_arch`` adapts the logical-axis rules to a concrete
+(architecture, mesh, workload) cell:
+
+* TP axes engage only where tensor dims divide the model-axis size
+  (heads/kv_heads/ff/vocab/experts/ssm head-dim);
+* architectures whose head count does NOT divide TP (minitron 24H,
+  qwen2-vl 12H, minicpm3 40H) fall back to CONTEXT-PARALLEL attention —
+  the "attn_seq" logical axis shards the query sequence over the model
+  axis, so attention compute still spreads across all chips without
+  splitting heads (DESIGN.md §6);
+* MoE: expert parallelism when E % tp == 0 (phi3.5: 16e), otherwise
+  per-expert d_ff tensor parallelism (mixtral: 8e on tp=16);
+* tiny-batch decode cells (long_500k, batch=1) replicate batch and shard
+  the KV-cache length over the data axis instead (context-parallel decode).
+
+``zero1_state_specs`` shards AdamW mu/nu over the data axis along the first
+divisible unsharded dim (ZeRO-1).  ``fsdp_param_specs`` applies the same
+transform to the parameters themselves (ZeRO-3 / FSDP via GSPMD).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig
+from .partitioning import LogicalRules, rules_for_mesh
+
+__all__ = ["rules_for_arch", "zero1_state_specs", "fsdp_param_specs",
+           "batch_axis_size", "input_pspecs"]
+
+
+def batch_axis_size(mesh, rules: LogicalRules) -> int:
+    axes = rules.get("batch")
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def rules_for_arch(
+    cfg: ModelConfig,
+    mesh,
+    shape: Optional[ShapeConfig] = None,
+    *,
+    sequence_parallel: bool = False,
+    expert_parallel: bool = True,
+) -> LogicalRules:
+    rules = rules_for_mesh(mesh, sequence_parallel=sequence_parallel,
+                           expert_parallel=expert_parallel)
+    tp = mesh.shape["model"]
+
+    heads_ok = bool(cfg.n_heads) and cfg.n_heads % tp == 0
+    rules["heads"] = ("model",) if heads_ok else None
+    if cfg.n_heads and not heads_ok:
+        # context-parallel attention fallback; align the residual stream so
+        # norms/projections don't reshard on every block boundary.
+        rules["attn_seq"] = ("model",)
+        rules["seq"] = ("model",)
+    rules["kv_heads"] = ("model",) if (cfg.n_kv_heads and cfg.n_kv_heads % tp == 0) else None
+    rules["ff"] = ("model",) if (cfg.d_ff and cfg.d_ff % tp == 0) else None
+    rules["vocab"] = ("model",) if cfg.padded_vocab % tp == 0 else None
+    if cfg.n_experts:
+        if expert_parallel and cfg.n_experts % tp == 0:
+            rules["experts"], rules["expert_ff"] = ("model",), None
+        else:
+            rules["experts"] = None
+            rules["expert_ff"] = ("model",) if cfg.d_ff % tp == 0 else None
+        rules["moe_capacity"] = rules["batch"]  # C ~ tokens: batch axes
+    if cfg.ssm_state:
+        rules["ssm_inner"] = ("model",) if cfg.ssm_head_p % tp == 0 else None
+
+    if shape is not None:
+        if shape.kind == "decode" and rules["kv_heads"] is None:
+            # KV heads can't split over the model axis -> shard the cache
+            # LENGTH there instead (partial-softmax decode); otherwise the
+            # 32k cache replicates 16x (v0 dry-run: 30-135 GiB/device).
+            rules["kv_len"] = ("model",)
+        bsz = batch_axis_size(mesh, rules)
+        if shape.global_batch % bsz != 0:
+            # tiny-batch cell (long_500k): context-parallel decode — batch
+            # replicated, KV length sharded over the data axis too.
+            rules["batch"] = None
+            if cfg.n_experts:
+                rules["moe_capacity"] = None
+            if shape.kind == "decode":
+                kl = rules.get("kv_len")
+                kl = kl if isinstance(kl, tuple) else ((kl,) if kl else ())
+                rules["kv_len"] = tuple(dict.fromkeys(("data",) + kl))
+    return rules
+
+
+def _spec_axes(spec: P):
+    out = set()
+    for e in spec:
+        if e is None:
+            continue
+        if isinstance(e, (tuple, list)):
+            out.update(e)
+        else:
+            out.add(e)
+    return out
+
+
+def _add_axis(spec: P, shape: Tuple[int, ...], axis_name: str, axis_size: int) -> P:
+    """Shard the first unsharded, divisible dim of ``shape`` on ``axis_name``.
+
+    No-op if the spec already uses ``axis_name`` (e.g. FSDP ran first) or if
+    no dim is divisible."""
+    if axis_name in _spec_axes(spec):
+        return spec
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (dim, cur) in enumerate(zip(shape, entries)):
+        if cur is None and dim % axis_size == 0 and dim >= axis_size:
+            entries[i] = axis_name
+            return P(*entries)
+    return spec  # nothing divisible: leave as-is
+
+
+def zero1_state_specs(param_specs, param_shapes, mesh) -> Any:
+    """AdamW state specs: mu/nu sharded over "data" (ZeRO-1), step replicated."""
+    data = mesh.shape["data"]
+
+    def tr(spec, sds):
+        return _add_axis(spec, sds.shape, "data", data)
+
+    mu = jax.tree.map(tr, param_specs, param_shapes,
+                      is_leaf=lambda x: isinstance(x, P))
+    return {"mu": mu, "nu": jax.tree.map(lambda s: s, mu,
+                                         is_leaf=lambda x: isinstance(x, P)),
+            "step": P()}
+
+
+def fsdp_param_specs(param_specs, param_shapes, mesh) -> Any:
+    """FSDP / ZeRO-3: parameters additionally sharded over "data"."""
+    data = mesh.shape["data"]
+    return jax.tree.map(lambda spec, sds: _add_axis(spec, sds.shape, "data", data),
+                        param_specs, param_shapes,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def input_pspecs(logical_axes: Dict[str, Tuple], rules: LogicalRules) -> Dict[str, P]:
+    from .partitioning import logical_to_spec
+    return {k: logical_to_spec(ax, rules) for k, ax in logical_axes.items()}

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for COAX's compute hot spots (paper §6 scans, §5 Alg. 1).
+
+Each kernel file contains the ``pl.pallas_call`` + BlockSpec tiling; ``ops``
+exposes padded jit'd wrappers; ``ref`` holds the pure-jnp oracles the tests
+compare against.  All kernels are validated in interpret mode on CPU; the
+BlockSpecs target TPU v5e VMEM/VPU/MXU geometry (DESIGN.md §3).
+"""
+from .ops import bucket_histogram, range_scan_query, split_by_margin
+from . import ref
+
+__all__ = ["range_scan_query", "bucket_histogram", "split_by_margin", "ref"]

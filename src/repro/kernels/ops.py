@@ -1,0 +1,115 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+These handle ragged sizes (padding to tile multiples), parameter packing,
+and expose numpy-friendly entry points the COAX core and benchmarks call.
+``use_pallas=False`` routes to the pure-jnp oracle (identical results) —
+the default on CPU, where interpret-mode Pallas is a correctness tool, not
+a fast path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .grid_histogram import grid_histogram
+from .margin_split import margin_split
+from .range_scan import range_scan
+
+__all__ = [
+    "range_scan_query",
+    "bucket_histogram",
+    "split_by_margin",
+]
+
+
+def _pad_to(arr: jnp.ndarray, multiple: int, value) -> jnp.ndarray:
+    n = arr.shape[-1]
+    rem = (-n) % multiple
+    if rem == 0:
+        return arr
+    pad = [(0, 0)] * (arr.ndim - 1) + [(0, rem)]
+    return jnp.pad(arr, pad, constant_values=value)
+
+
+def range_scan_query(
+    rows_t,                # (D, N) column-major records
+    rect_lo,               # (D,)
+    rect_hi,               # (D,)
+    window=None,           # (2,) [lo, hi) scan window; None -> whole array
+    *,
+    tile: int = 512,
+    use_pallas: bool = True,
+    interpret: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Count + mask for one translated query (paper §6 scan).
+
+    Returns ``(count, mask (N,))`` where mask covers the ORIGINAL n records.
+    """
+    rows_t = jnp.asarray(rows_t, jnp.float32)
+    d, n = rows_t.shape
+    if window is None:
+        window = jnp.array([0, n], jnp.int32)
+    window = jnp.asarray(window, jnp.int32)
+    padded = _pad_to(rows_t, tile, jnp.inf)  # +inf rows never match (< hi fails)
+    if use_pallas:
+        mask, counts = range_scan(
+            padded, jnp.asarray(rect_lo, jnp.float32), jnp.asarray(rect_hi, jnp.float32),
+            window, tile=tile, interpret=interpret,
+        )
+    else:
+        mask, counts = ref.range_scan_ref(
+            padded, jnp.asarray(rect_lo, jnp.float32), jnp.asarray(rect_hi, jnp.float32),
+            window, tile=tile,
+        )
+    return counts.sum(), mask[:n]
+
+
+def bucket_histogram(
+    x, d, *,
+    buckets: int = 64,
+    tile: int = 256,
+    use_pallas: bool = True,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Algorithm 1 bucket counts on the device; returns (B, B) float32."""
+    x = jnp.asarray(x, jnp.float32)
+    d = jnp.asarray(d, jnp.float32)
+    n = x.shape[0]
+    x_lo, x_hi = x.min(), x.max()
+    d_lo, d_hi = d.min(), d.max()
+    wx = jnp.maximum((x_hi - x_lo) / buckets, 1e-30)
+    wd = jnp.maximum((d_hi - d_lo) / buckets, 1e-30)
+    params = jnp.stack(
+        [x_lo, 1.0 / wx, d_lo, 1.0 / wd,
+         jnp.float32(n), jnp.float32(0), jnp.float32(0), jnp.float32(0)]
+    )
+    xp = _pad_to(x, tile, 0.0)
+    dp = _pad_to(d, tile, 0.0)
+    if use_pallas:
+        return grid_histogram(xp, dp, params, buckets=buckets, tile=tile, interpret=interpret)
+    return ref.grid_histogram_ref(xp, dp, params, buckets=buckets)
+
+
+def split_by_margin(
+    x, d, m, b, eps_lb, eps_ub, *,
+    tile: int = 1024,
+    use_pallas: bool = True,
+    interpret: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused Alg.-1 split: returns ``(disp (N,), inlier_mask (N,) bool)``."""
+    x = jnp.asarray(x, jnp.float32)
+    d = jnp.asarray(d, jnp.float32)
+    n = x.shape[0]
+    params = jnp.array([m, b, eps_lb, eps_ub, n, 0, 0, 0], jnp.float32)
+    xp = _pad_to(x, tile, 0.0)
+    dp = _pad_to(d, tile, 0.0)
+    if use_pallas:
+        disp, mask, _ = margin_split(xp, dp, params, tile=tile, interpret=interpret)
+    else:
+        disp, mask, _ = ref.margin_split_ref(xp, dp, params, tile=tile)
+    return disp[:n], mask[:n].astype(bool)

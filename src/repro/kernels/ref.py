@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``*_ref`` mirrors its kernel's exact contract (same inputs incl. padding
+and params vectors, same outputs) so the tests can ``assert_allclose`` across
+shape/dtype sweeps, and doubles as the CPU fallback path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["range_scan_ref", "grid_histogram_ref", "margin_split_ref"]
+
+
+def range_scan_ref(rows_t, rect_lo, rect_hi, window, *, tile: int = 512):
+    """Oracle for ``range_scan.range_scan``: (mask (N,), counts (num_tiles,))."""
+    d, n = rows_t.shape
+    inside = jnp.all(
+        (rows_t >= rect_lo[:, None]) & (rows_t < rect_hi[:, None]), axis=0
+    )
+    gid = jnp.arange(n, dtype=jnp.int32)
+    in_window = (gid >= window[0]) & (gid < window[1])
+    mask = (inside & in_window).astype(jnp.int32)
+    counts = mask.reshape(n // tile, tile).sum(axis=1)
+    return mask, counts
+
+
+def grid_histogram_ref(x, d, params, *, buckets: int = 64):
+    """Oracle for ``grid_histogram.grid_histogram``: (B, B) f32 counts."""
+    x_lo, inv_wx, d_lo, inv_wd, n_valid = params[0], params[1], params[2], params[3], params[4]
+    n = x.shape[0]
+    ix = jnp.clip((x - x_lo) * inv_wx, 0, buckets - 1).astype(jnp.int32)
+    jd = jnp.clip((d - d_lo) * inv_wd, 0, buckets - 1).astype(jnp.int32)
+    valid = jnp.arange(n, dtype=jnp.float32) < n_valid
+    flat = ix * buckets + jd
+    hist = jnp.zeros(buckets * buckets, dtype=jnp.float32).at[flat].add(
+        valid.astype(jnp.float32)
+    )
+    return hist.reshape(buckets, buckets)
+
+
+def margin_split_ref(x, d, params, *, tile: int = 1024):
+    """Oracle for ``margin_split.margin_split``: (disp, mask, tile_counts)."""
+    m, b, eps_lb, eps_ub, n_valid = params[0], params[1], params[2], params[3], params[4]
+    n = x.shape[0]
+    disp = d - (m * x + b)
+    valid = jnp.arange(n, dtype=jnp.float32) < n_valid
+    mask = ((disp >= -eps_lb) & (disp <= eps_ub) & valid).astype(jnp.int32)
+    counts = mask.reshape(n // tile, tile).sum(axis=1)
+    return disp, mask, counts

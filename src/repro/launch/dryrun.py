@@ -1,0 +1,383 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x mesh)
+cell with ShapeDtypeStruct inputs — no allocation — and record the memory
+analysis, cost analysis and collective-communication volume that feed the
+roofline table (EXPERIMENTS.md §Dry-run / §Roofline).
+
+The XLA_FLAGS line above MUST run before any jax import: jax locks the device
+count at first backend initialisation.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma2-27b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all            # every cell, both meshes
+  python -m repro.launch.dryrun --all --jobs 4   # parallel subprocesses
+"""
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..configs import SHAPES, get_config, list_configs
+from ..configs.base import ModelConfig, ShapeConfig
+from ..distributed.partitioning import use_rules
+from ..distributed.sharding import (
+    fsdp_param_specs,
+    input_pspecs,
+    rules_for_arch,
+    zero1_state_specs,
+)
+from ..models.common import axes_to_pspecs
+from ..models.model import build_model
+from ..optim import AdamWConfig, adamw_init
+from ..runtime.steps import make_prefill_step, make_serve_step, make_train_step
+from .hloparse import collective_bytes
+from .mesh import make_production_mesh
+from .roofline import TPU_V5E, model_flops, roofline
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def skip_reason(cfg: ModelConfig, shape: ShapeConfig):
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return ("full quadratic attention at 524k context exceeds any serving "
+                "envelope; run only for SSM/hybrid/SWA archs per the brief")
+    return None
+
+
+def _enc_len(cfg: ModelConfig, shape: ShapeConfig):
+    """Encoder length for enc-dec decode cells (frames seen at prefill)."""
+    return 4096 if cfg.family == "encdec" else None
+
+
+def _lower_cell(cfg, shape, mesh, rules, *, fsdp: bool, microbatches: int = 1):
+    """Lower + compile one cell; returns (compiled, params_sds)."""
+    model = build_model(cfg)
+    holder = {}
+
+    def _init_params(k):
+        params, ax = model.init(k)
+        holder["axes"] = ax
+        return params
+
+    params_sds = jax.eval_shape(_init_params, jax.random.key(0))
+    if shape.kind != "train":
+        # serving deploys bf16 weights (f32 masters are a training artifact)
+        params_sds = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, jnp.bfloat16)
+            if a.dtype == jnp.float32 else a, params_sds)
+    param_specs = axes_to_pspecs(holder["axes"], rules)
+    if fsdp and shape.kind == "train":
+        param_specs = fsdp_param_specs(param_specs, params_sds, mesh)
+    batch_sds = model.input_specs(shape)
+    batch_specs = input_pspecs(model.input_logical_axes(shape), rules)
+
+    if shape.kind == "train":
+        opt_sds = jax.eval_shape(adamw_init, params_sds)
+        opt_specs = zero1_state_specs(param_specs, params_sds, mesh)
+        step_fn = make_train_step(model, AdamWConfig(), microbatches=microbatches)
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(param_specs, opt_specs, batch_specs),
+            out_shardings=(param_specs, opt_specs, None),
+            donate_argnums=(0, 1),
+        )
+        lowered = jitted.lower(params_sds, opt_sds, batch_sds)
+    elif shape.kind == "prefill":
+        step_fn = make_prefill_step(model, cache_len=shape.seq_len)
+        jitted = jax.jit(step_fn, in_shardings=(param_specs, batch_specs))
+        lowered = jitted.lower(params_sds, batch_sds)
+    else:
+        enc_len = _enc_len(cfg, shape)
+        cache_sds = model.init_cache(shape.global_batch, shape.seq_len,
+                                     enc_len=enc_len, abstract=True)
+        cache_ax = model.cache_logical_axes(shape.global_batch, shape.seq_len,
+                                            enc_len=enc_len)
+        cache_specs = input_pspecs(cache_ax, rules)
+        tok_sds = model.input_specs(shape)["tokens"]
+        tok_spec = input_pspecs(model.input_logical_axes(shape), rules)["tokens"]
+        step_fn = make_serve_step(model)
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(param_specs, cache_specs, tok_spec, P()),
+            out_shardings=(None, cache_specs),
+            donate_argnums=(1,),
+        )
+        lowered = jitted.lower(params_sds, cache_sds, tok_sds,
+                               jax.ShapeDtypeStruct((), jnp.int32))
+    return lowered.compile(), params_sds
+
+
+def _probe_depths(cfg):
+    """Reduced-depth config pair for linear cost extrapolation."""
+    if cfg.family == "hybrid":
+        period = cfg.attn_every * cfg.n_shared_attn
+        l1, l2 = period, 2 * period
+        return (dataclasses.replace(cfg, n_layers=l1),
+                dataclasses.replace(cfg, n_layers=l2), l1, l2)
+    if cfg.family == "encdec":
+        return (dataclasses.replace(cfg, n_layers=1, enc_layers=1),
+                dataclasses.replace(cfg, n_layers=2, enc_layers=2), 1, 2)
+    period = max(len(cfg.layer_pattern), 1)
+    return (dataclasses.replace(cfg, n_layers=period),
+            dataclasses.replace(cfg, n_layers=2 * period), period, 2 * period)
+
+
+def _extract_cost(compiled):
+    ca = compiled.cost_analysis() or {}
+    total, per = collective_bytes(compiled.as_text())
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+        "coll_total": float(total),
+        "coll_per_op": per,
+    }
+
+
+def probe_costs(cfg, shape, mesh, rules, *, fsdp: bool,
+                microbatches: int = 1) -> dict:
+    """Trip-count-correct cost terms.
+
+    XLA's cost analysis counts while-loop bodies ONCE, so the production
+    (scan-over-layers) compile under-reports flops/bytes/collectives by ~L.
+    This probe recompiles two reduced-depth configs with every scan fully
+    unrolled (models/common.set_probe_unroll) and extrapolates linearly in
+    depth — exact for homogeneous stacks, period-aware for alternating ones.
+    """
+    from ..models.common import set_probe_unroll
+    cfg1, cfg2, l1, l2 = _probe_depths(cfg)
+    # cost is linear in tokens, so the probe always uses microbatches=1:
+    # identical totals, 1/M the unrolled-HLO compile time.
+    set_probe_unroll(True)
+    try:
+        c1, _ = _lower_cell(cfg1, shape, mesh, rules, fsdp=fsdp, microbatches=1)
+        m1 = _extract_cost(c1)
+        c2, _ = _lower_cell(cfg2, shape, mesh, rules, fsdp=fsdp, microbatches=1)
+        m2 = _extract_cost(c2)
+    finally:
+        set_probe_unroll(False)
+    L = cfg.n_layers
+    scale = (L - l1) / (l2 - l1)
+
+    def ext(a, b):
+        return a + (b - a) * scale
+
+    ops = set(m1["coll_per_op"]) | set(m2["coll_per_op"])
+    per_op = {op: max(ext(m1["coll_per_op"].get(op, 0), m2["coll_per_op"].get(op, 0)), 0.0)
+              for op in ops}
+    return {
+        "method": f"unrolled depth-extrapolation (L1={l1}, L2={l2}, L={L})",
+        "flops_per_device": max(ext(m1["flops"], m2["flops"]), 0.0),
+        "bytes_per_device": max(ext(m1["bytes"], m2["bytes"]), 0.0),
+        "transcendentals": max(ext(m1["transcendentals"], m2["transcendentals"]), 0.0),
+        "collective_bytes_per_device": max(ext(m1["coll_total"], m2["coll_total"]), 0.0),
+        "collective_per_op": per_op,
+        "probe_points": {"l1": m1, "l2": m2},
+    }
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             fsdp: bool = True, sequence_parallel: bool = None,
+             expert_parallel: bool = True, remat: str = None,
+             attn_chunk: int = 1024, tag: str = "baseline",
+             probe: bool = True, microbatches: int = None,
+             split_cache: bool = False, ssd_chunk: int = None,
+             capacity_factor: float = None,
+             out_dir: Path = OUT_DIR) -> dict:
+    cfg = get_config(arch)
+    if remat is not None:
+        cfg = dataclasses.replace(cfg, remat=remat)
+    if split_cache:
+        cfg = dataclasses.replace(cfg, split_local_cache=True)
+    if ssd_chunk is not None:
+        cfg = dataclasses.replace(cfg, ssd_chunk=ssd_chunk)
+    if capacity_factor is not None:
+        cfg = dataclasses.replace(cfg, capacity_factor=capacity_factor)
+    if attn_chunk != 1024:
+        cfg = dataclasses.replace(cfg, attn_chunk=attn_chunk)
+    shape = SHAPES[shape_name]
+    if sequence_parallel is None:
+        # default: Megatron-style SP for train cells (remat-saved residual
+        # carries shrink by the TP degree; v0 dry-run overflowed HBM without)
+        sequence_parallel = shape.kind == "train"
+    if microbatches is None:
+        # default: 4-way gradient accumulation for train cells (live
+        # activations scale with the microbatch, not the global batch)
+        microbatches = 4 if shape.kind == "train" else 1
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind, "tag": tag,
+        "fsdp": fsdp, "sequence_parallel": sequence_parallel,
+        "expert_parallel": expert_parallel, "remat": cfg.remat,
+        "attn_chunk": attn_chunk, "microbatches": microbatches,
+    }
+    reason = skip_reason(cfg, shape)
+    if reason:
+        result.update(status="skipped", reason=reason)
+        return result
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    rules = rules_for_arch(cfg, mesh, shape,
+                           sequence_parallel=sequence_parallel,
+                           expert_parallel=expert_parallel)
+    model = build_model(cfg)
+    t0 = time.time()
+
+    with jax.set_mesh(mesh), use_rules(rules):
+        compiled, params_sds = _lower_cell(cfg, shape, mesh, rules, fsdp=fsdp,
+                                           microbatches=microbatches)
+        t_compile = time.time() - t0
+
+        ma = compiled.memory_analysis()
+        scanbody = _extract_cost(compiled)
+
+        cost = None
+        if probe:
+            cost = probe_costs(cfg, shape, mesh, rules, fsdp=fsdp,
+                               microbatches=microbatches)
+
+    if cost is not None:
+        flops_dev = cost["flops_per_device"]
+        bytes_dev = cost["bytes_per_device"]
+        coll_total = cost["collective_bytes_per_device"]
+        coll_per_op = cost["collective_per_op"]
+    else:  # fall back to the (trip-count-naive) scan-body numbers
+        flops_dev = scanbody["flops"]
+        bytes_dev = scanbody["bytes"]
+        coll_total = scanbody["coll_total"]
+        coll_per_op = scanbody["coll_per_op"]
+
+    active = model.active_param_count(params_sds)
+    total = model.param_count(params_sds)
+    embed_p = cfg.padded_vocab * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    mf = model_flops(cfg, shape, active, embed_p)
+    terms = roofline(flops_dev, bytes_dev, coll_total)
+
+    result.update(
+        status="ok",
+        n_chips=n_chips,
+        compile_s=round(t_compile, 1),
+        params_total=total,
+        params_active=active,
+        memory={
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_bytes_per_device": ma.argument_size_in_bytes
+                + ma.output_size_in_bytes + ma.temp_size_in_bytes
+                - ma.alias_size_in_bytes,
+        },
+        cost={
+            "flops_per_device": flops_dev,
+            "bytes_per_device": bytes_dev,
+            "transcendentals": (cost or scanbody).get("transcendentals", 0.0),
+            "method": (cost or {}).get("method", "scan-body (trip-count naive)"),
+        },
+        cost_scanbody=scanbody,
+        collectives={"total_bytes_per_device": coll_total, "per_op": coll_per_op},
+        model_flops_global=mf,
+        model_flops_per_device=mf / n_chips,
+        useful_flops_ratio=(mf / n_chips) / flops_dev if flops_dev else None,
+        roofline=terms,
+        roofline_mfu_bound=((mf / n_chips) / TPU_V5E["peak_flops"])
+            / terms["step_time_bound_s"] if terms["step_time_bound_s"] else None,
+        rules={k: list(v) if isinstance(v, tuple) else v for k, v in rules.items()},
+    )
+    return result
+
+
+def cell_filename(arch, shape, mesh, tag):
+    return f"{arch}__{shape}__{mesh}__{tag}.json"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", type=str, default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true", help="run every cell, both meshes")
+    ap.add_argument("--jobs", type=int, default=2)
+    ap.add_argument("--tag", type=str, default="baseline")
+    ap.add_argument("--fsdp", type=int, default=1)
+    ap.add_argument("--sp", type=int, default=-1,
+                    help="sequence parallelism: -1 auto (train on), 0 off, 1 on")
+    ap.add_argument("--ep", type=int, default=1, help="expert parallelism")
+    ap.add_argument("--remat", type=str, default=None, choices=[None, "none", "full"])
+    ap.add_argument("--attn-chunk", type=int, default=1024)
+    ap.add_argument("--probe", type=int, default=1)
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--split-cache", type=int, default=0)
+    ap.add_argument("--ssd-chunk", type=int, default=None)
+    ap.add_argument("--capacity-factor", type=float, default=None)
+    ap.add_argument("--out", type=str, default=str(OUT_DIR))
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        cells = [(a, s, m) for a in list_configs() for s in SHAPES
+                 for m in ("single", "multi")]
+        procs, failures = [], []
+        for a, s, m in cells:
+            fn = out_dir / cell_filename(a, s, m, args.tag)
+            if fn.exists():
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", a, "--shape", s, "--mesh", m, "--tag", args.tag,
+                   "--fsdp", str(args.fsdp), "--sp", str(args.sp),
+                   "--ep", str(args.ep), "--probe", str(args.probe),
+                   "--out", str(out_dir)]
+            if args.remat:
+                cmd += ["--remat", args.remat]
+            procs.append((a, s, m, subprocess.Popen(cmd)))
+            while len([p for *_, p in procs if p.poll() is None]) >= args.jobs:
+                time.sleep(2)
+        for a, s, m, p in procs:
+            if p.wait() != 0:
+                failures.append((a, s, m))
+        print(f"dry-run complete; {len(failures)} failures: {failures}")
+        sys.exit(1 if failures else 0)
+
+    try:
+        res = run_cell(args.arch, args.shape, args.mesh, fsdp=bool(args.fsdp),
+                       sequence_parallel=(bool(args.sp) if args.sp >= 0 else None),
+                       expert_parallel=bool(args.ep), remat=args.remat,
+                       attn_chunk=args.attn_chunk, tag=args.tag,
+                       probe=bool(args.probe), microbatches=args.microbatches,
+                       split_cache=bool(args.split_cache),
+                       ssd_chunk=args.ssd_chunk,
+                       capacity_factor=args.capacity_factor,
+                       out_dir=out_dir)
+    except Exception:
+        res = {"arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+               "tag": args.tag, "status": "error",
+               "error": traceback.format_exc()}
+    fn = out_dir / cell_filename(args.arch, args.shape, args.mesh, args.tag)
+    fn.write_text(json.dumps(res, indent=2, default=str))
+    if res["status"] == "ok":
+        r = res["roofline"]
+        print(f"{args.arch} {args.shape} {args.mesh}: OK compile={res['compile_s']}s "
+              f"mem={res['memory']['peak_bytes_per_device']/2**30:.2f}GiB "
+              f"terms(c/m/coll)={r['compute_s']:.4f}/{r['memory_s']:.4f}/"
+              f"{r['collective_s']:.4f}s dominant={r['dominant']}")
+    else:
+        print(f"{args.arch} {args.shape} {args.mesh}: {res['status'].upper()}")
+        if res["status"] == "error":
+            print(res["error"][-2000:])
+            sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

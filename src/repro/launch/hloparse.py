@@ -1,0 +1,58 @@
+"""Parse collective-communication volume out of compiled HLO text.
+
+``cost_analysis`` has no collective-bytes entry, so the roofline's collective
+term is derived here: sum the RESULT sizes of every all-reduce / all-gather /
+reduce-scatter / all-to-all / collective-permute in the (per-device SPMD)
+module.  Async pairs (``*-start``/``*-done``) are counted once via the start
+op; ``*-done`` and fusion-internal duplicates are skipped.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Tuple
+
+__all__ = ["collective_bytes", "DTYPE_BYTES"]
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+# one shape: f32[128,256]{1,0}
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+# op line:  %name = <type-or-tuple> <collective>(...)
+_LINE = re.compile(
+    r"=\s*(\([^=]*?\)|[\w\[\]{},]+)\s+(" + "|".join(_COLLECTIVES) + r")(-start)?\(")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue  # token types etc.
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Tuple[int, Dict[str, int]]:
+    """Returns (total_bytes, per_op_type_bytes) for one SPMD module."""
+    per: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        if "-done(" in line or "-done." in line:
+            continue
+        m = _LINE.search(line)
+        if not m:
+            continue
+        type_str, op, _ = m.groups()
+        b = _shape_bytes(type_str)
+        per[op] = per.get(op, 0) + b
+    return sum(per.values()), per

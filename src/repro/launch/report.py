@@ -1,0 +1,71 @@
+"""Generate the EXPERIMENTS.md §Dry-run/§Roofline tables from the dry-run
+JSON cells.
+
+    PYTHONPATH=src python -m repro.launch.report [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from glob import glob
+from pathlib import Path
+
+HBM = 16 * 2**30
+
+
+def load(dir_: Path, tag: str = "baseline"):
+    cells = {}
+    for f in sorted(glob(str(dir_ / f"*__{tag}.json"))):
+        d = json.loads(Path(f).read_text())
+        cells[(d["arch"], d["shape"], d["mesh"])] = d
+    return cells
+
+
+def fmt_row(d):
+    if d["status"] == "skipped":
+        return (f"| {d['arch']} | {d['shape']} | {d['mesh']} | — | — | — | — | — | "
+                f"skipped |")
+    r = d["roofline"]
+    mem = d["memory"]["peak_bytes_per_device"] / 2**30
+    mfu = d.get("roofline_mfu_bound") or 0
+    fit = "yes" if d["memory"]["peak_bytes_per_device"] <= HBM else "**NO**"
+    return (f"| {d['arch']} | {d['shape']} | {d['mesh']} | {mem:.1f} | "
+            f"{r['compute_s']*1e3:.1f} | {r['memory_s']*1e3:.1f} | "
+            f"{r['collective_s']*1e3:.1f} | {r['dominant']} | "
+            f"{mfu:.3f} | {fit} |")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=str(
+        Path(__file__).resolve().parents[3] / "experiments" / "dryrun"))
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--mesh", default=None, choices=[None, "single", "multi"])
+    args = ap.parse_args()
+    cells = load(Path(args.dir), args.tag)
+
+    print("| arch | shape | mesh | GiB/dev | compute ms | memory ms | "
+          "collective ms | dominant | MFU-bound | fits HBM |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for key in sorted(cells):
+        d = cells[key]
+        if args.mesh and d["mesh"] != args.mesh:
+            continue
+        print(fmt_row(d))
+
+    ok = [d for d in cells.values() if d["status"] == "ok"]
+    sk = [d for d in cells.values() if d["status"] == "skipped"]
+    fit = [d for d in ok if d["memory"]["peak_bytes_per_device"] <= HBM]
+    print(f"\ncells={len(cells)} ok={len(ok)} skipped={len(sk)} "
+          f"fit_hbm={len(fit)}/{len(ok)}")
+    if ok:
+        worst = min(ok, key=lambda d: d.get("roofline_mfu_bound") or 0)
+        coll = max(ok, key=lambda d: d["roofline"]["collective_s"]
+                   / max(d["roofline"]["step_time_bound_s"], 1e-12))
+        print(f"worst MFU-bound: {worst['arch']}/{worst['shape']}/{worst['mesh']} "
+              f"= {worst.get('roofline_mfu_bound') or 0:.4f}")
+        print(f"most collective-bound: {coll['arch']}/{coll['shape']}/{coll['mesh']}")
+
+
+if __name__ == "__main__":
+    main()

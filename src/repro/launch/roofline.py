@@ -1,0 +1,59 @@
+"""Roofline terms for the TPU v5e target (structural, from compiled HLO).
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs
+    memory     = HLO_bytes_per_device / HBM_bw
+    collective = collective_bytes_per_device / ICI_bw
+
+``cost_analysis``/HLO text describe the per-device SPMD program, so no /chips
+normalisation is needed beyond what XLA already applied.
+
+MODEL_FLOPS uses the standard 6·N·D (train) / 2·N·D (inference) accounting
+with N = active non-embedding parameters and D = tokens processed per step;
+MODEL_FLOPS / HLO_FLOPs exposes remat recompute and redundant work.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from ..configs.base import ModelConfig, ShapeConfig
+
+__all__ = ["TPU_V5E", "roofline", "model_flops"]
+
+TPU_V5E = {
+    "peak_flops": 197e12,   # bf16 FLOP/s per chip
+    "hbm_bw": 819e9,        # bytes/s per chip
+    "ici_bw": 50e9,         # bytes/s per link
+}
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig, active_params: int,
+                embed_params: int) -> float:
+    """Useful model FLOPs per step (global, all chips)."""
+    n = max(active_params - embed_params, 1)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence per step
+    return 2.0 * n * shape.global_batch
+
+
+def roofline(flops_per_device: float, bytes_per_device: float,
+             coll_bytes_per_device: float, hw: Dict[str, float] = TPU_V5E
+             ) -> Dict[str, float]:
+    compute = flops_per_device / hw["peak_flops"]
+    memory = bytes_per_device / hw["hbm_bw"]
+    collective = coll_bytes_per_device / hw["ici_bw"]
+    dominant = max(("compute", compute), ("memory", memory),
+                   ("collective", collective), key=lambda kv: kv[1])
+    step_time = max(compute, memory, collective)
+    return {
+        "compute_s": compute,
+        "memory_s": memory,
+        "collective_s": collective,
+        "dominant": dominant[0],
+        "step_time_bound_s": step_time,
+    }

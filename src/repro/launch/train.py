@@ -1,0 +1,95 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch mamba2-130m \
+        --steps 200 --batch 8 --seq 256 [--mesh-data D --mesh-model M]
+
+On a multi-chip host this builds a (data, model) mesh, installs the
+architecture's sharding rules, and runs the fault-tolerant train loop with
+pjit'd steps; on this single-CPU container it degrades to one device (the
+same code path the smoke tests exercise).  Checkpoints land in --ckpt-dir
+and are elastic: restart with a different mesh and the restore re-shards.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from ..configs import get_config, list_configs
+from ..data.curation import CuratedSelector, MetaQuery
+from ..data.pipeline import ShardedLoader, make_corpus
+from ..distributed.partitioning import use_rules
+from ..distributed.sharding import rules_for_arch
+from ..models import build_model
+from ..optim import AdamWConfig
+from ..runtime.train_loop import TrainLoopConfig, train
+from .mesh import make_local_mesh
+
+
+def reduced(cfg, layers, d_model):
+    return dataclasses.replace(
+        cfg, n_layers=layers, d_model=d_model,
+        d_ff=max(d_model * 3, 128),
+        n_heads=min(cfg.n_heads, 8) if cfg.n_heads else 0,
+        n_kv_heads=min(cfg.n_kv_heads, 4) if cfg.n_kv_heads else 0,
+        head_dim=(d_model // 8) if cfg.head_dim else None,
+        vocab_size=min(cfg.vocab_size, 8192),
+        enc_layers=min(cfg.enc_layers, layers) if cfg.enc_layers else 0,
+        n_patches=min(cfg.n_patches, 16) if cfg.n_patches else 0)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_configs(), default="mamba2-130m")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--mesh-data", type=int, default=1)
+    ap.add_argument("--mesh-model", type=int, default=1)
+    ap.add_argument("--reduced-layers", type=int, default=None,
+                    help="shrink the config for CPU runs (None = full)")
+    ap.add_argument("--reduced-width", type=int, default=256)
+    ap.add_argument("--curate", action="store_true",
+                    help="select training docs through the COAX index")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced_layers:
+        cfg = reduced(cfg, args.reduced_layers, args.reduced_width)
+    model = build_model(cfg)
+    print(f"[launch] {cfg.name}: {model.param_count()/1e6:.1f}M params")
+
+    corpus = make_corpus(50_000, vocab_size=min(cfg.padded_vocab, 32_000))
+    doc_ids = None
+    if args.curate:
+        sel = CuratedSelector(corpus)
+        doc_ids = sel.select(MetaQuery(token_len=(args.seq // 2, 32768),
+                                       quality=(0.5, 1.1)))
+        print(f"[launch] COAX curation: {doc_ids.size:,} docs")
+    loader = ShardedLoader(corpus, batch_size=args.batch, seq_len=args.seq,
+                           doc_ids=doc_ids,
+                           process_index=jax.process_index(),
+                           process_count=jax.process_count())
+
+    use_mesh = args.mesh_data * args.mesh_model > 1
+    loop_cfg = TrainLoopConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
+                               ckpt_every=args.ckpt_every, log_every=10)
+    if use_mesh:
+        mesh = make_local_mesh(args.mesh_data, args.mesh_model)
+        rules = rules_for_arch(cfg, mesh)
+        with jax.set_mesh(mesh), use_rules(rules):
+            out = train(model, iter(loader), AdamWConfig(lr=args.lr), loop_cfg)
+    else:
+        out = train(model, iter(loader), AdamWConfig(lr=args.lr), loop_cfg)
+    loader.close()
+    print(f"[launch] finished step {out['final_step']}, "
+          f"loss {out['history'][-1]['loss']:.4f}, restarts {out['restarts']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,363 @@
+"""Attention layers: GQA (+RoPE / M-RoPE, sliding-window, softcap), MLA
+(DeepSeek/MiniCPM3-style multi-head latent attention), and cross-attention.
+
+Training attention is CHUNKED (flash-style online softmax over KV blocks via
+``lax.scan``) so the S x S score matrix is never materialised — O(S * chunk)
+live memory instead of O(S^2).  This is the TPU-idiomatic formulation (splash
+attention's structure) and keeps the dry-run memory analysis honest at 32k
+sequence length.
+
+Decode attention is a single fused pass over the KV cache.  Sliding-window
+layers use a RING cache of exactly ``window`` slots, which is what makes the
+``long_500k`` decode shape tractable for SWA architectures (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.partitioning import shard
+from .common import (DTYPE, apply_mrope, apply_rope, dense_init, scan_unroll,
+                     softcap)
+
+NEG = -1e30
+
+
+# --------------------------------------------------------------------------- #
+# chunked training attention
+# --------------------------------------------------------------------------- #
+
+def chunked_attention(
+    q: jax.Array,                 # (B, Sq, H, hd)
+    k: jax.Array,                 # (B, Skv, K, hd)
+    v: jax.Array,                 # (B, Skv, K, vd)
+    *,
+    q_offset=0,
+    causal: bool = True,
+    window: Optional[int] = None,
+    attn_softcap: Optional[float] = None,
+    chunk: int = 1024,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Online-softmax attention over KV chunks; returns (B, Sq, H, vd)."""
+    b, sq, h, hd = q.shape
+    _, skv, kh, vd = v.shape
+    rep = h // kh
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    chunk = min(chunk, skv)
+    assert skv % chunk == 0, (skv, chunk)
+    n_chunks = skv // chunk
+
+    qh = q.reshape(b, sq, kh, rep, hd)
+    kc = k.reshape(b, n_chunks, chunk, kh, hd)
+    vc = v.reshape(b, n_chunks, chunk, kh, vd)
+    pos_q = q_offset + jnp.arange(sq)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        j, kj, vj = xs
+        s = jnp.einsum("bqkrd,bckd->bqkrc", qh, kj.astype(qh.dtype),
+                       preferred_element_type=jnp.float32) * scale
+        if attn_softcap is not None:
+            s = softcap(s, attn_softcap)
+        pos_k = j * chunk + jnp.arange(chunk)
+        mask = jnp.ones((sq, chunk), bool)
+        if causal:
+            mask &= pos_q[:, None] >= pos_k[None, :]
+        if window is not None:
+            mask &= (pos_q[:, None] - pos_k[None, :]) < window
+        s = jnp.where(mask[None, :, None, None, :], s, NEG)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bqkrc,bckd->bqkrd", p.astype(vj.dtype), vj,
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, sq, kh, rep), NEG, jnp.float32)
+    l0 = jnp.zeros((b, sq, kh, rep), jnp.float32)
+    a0 = jnp.zeros((b, sq, kh, rep, vd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (jnp.arange(n_chunks), kc.swapaxes(0, 1), vc.swapaxes(0, 1)),
+        unroll=scan_unroll(),
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, sq, h, vd).astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,                 # (B, 1, H, hd)
+    k_cache: jax.Array,           # (B, T, K, hd)
+    v_cache: jax.Array,           # (B, T, K, vd)
+    valid_mask: jax.Array,        # (B, T) bool — which slots hold real keys
+    *,
+    attn_softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Single-token attention over a (possibly ring) KV cache."""
+    b, _, h, hd = q.shape
+    _, t, kh, vd = v_cache.shape
+    rep = h // kh
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    # bf16 operands + f32 accumulation: never materialise an f32 copy of the
+    # KV cache (it tripled decode memory in the v1 dry-run).
+    qh = q.reshape(b, kh, rep, hd).astype(k_cache.dtype)
+    s = jnp.einsum("bkrd,btkd->bkrt", qh, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    if attn_softcap is not None:
+        s = softcap(s, attn_softcap)
+    s = jnp.where(valid_mask[:, None, None, :], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkrt,btkd->bkrd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, vd).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# GQA attention block
+# --------------------------------------------------------------------------- #
+
+def gqa_init(key, d_model: int, n_heads: int, n_kv: int, head_dim: int):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    params, axes = {}, {}
+    params["wq"], axes["wq"] = dense_init(kq, d_model, n_heads * head_dim, "embed", "heads")
+    params["wk"], axes["wk"] = dense_init(kk, d_model, n_kv * head_dim, "embed", "kv_heads")
+    params["wv"], axes["wv"] = dense_init(kv, d_model, n_kv * head_dim, "embed", "kv_heads")
+    params["wo"], axes["wo"] = dense_init(ko, n_heads * head_dim, d_model, "heads", "embed")
+    return params, axes
+
+
+def _project_qkv(params, x, n_heads, n_kv, head_dim):
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"].astype(x.dtype)).reshape(b, s, n_heads, head_dim)
+    k = jnp.einsum("bsd,dh->bsh", x, params["wk"].astype(x.dtype)).reshape(b, s, n_kv, head_dim)
+    v = jnp.einsum("bsd,dh->bsh", x, params["wv"].astype(x.dtype)).reshape(b, s, n_kv, head_dim)
+    q = shard(q, "batch", "attn_seq", "heads", None)
+    k = shard(k, "batch", None, "kv_heads", None)
+    v = shard(v, "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+def gqa_forward(
+    params, x, *,
+    n_heads: int, n_kv: int, head_dim: int,
+    rope_theta: float = 10_000.0,
+    positions=None,               # (B, S) or None -> arange
+    mrope_sections: Optional[Tuple[int, int, int]] = None,
+    positions3=None,              # (B, S, 3) for M-RoPE
+    causal: bool = True,
+    window: Optional[int] = None,
+    attn_softcap: Optional[float] = None,
+    query_scale: Optional[float] = None,
+    chunk: int = 1024,
+):
+    """Training/prefill attention; returns (out, (k, v)) so prefill can
+    seed the decode cache."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(params, x, n_heads, n_kv, head_dim)
+    if mrope_sections is not None:
+        q = apply_mrope(q, positions3, mrope_sections, rope_theta)
+        k = apply_mrope(k, positions3, mrope_sections, rope_theta)
+    else:
+        pos = positions if positions is not None else jnp.arange(s)[None, :]
+        q = apply_rope(q, pos, rope_theta)
+        k = apply_rope(k, pos, rope_theta)
+    out = chunked_attention(
+        q, k, v, causal=causal, window=window,
+        attn_softcap=attn_softcap, chunk=chunk, scale=query_scale,
+    )
+    out = shard(out, "batch", "attn_seq", "heads", None)
+    proj = jnp.einsum("bsh,he->bse", out.reshape(b, s, n_heads * head_dim),
+                      params["wo"].astype(x.dtype))
+    return shard(proj, "batch", "seq", "embed"), (k, v)
+
+
+def gqa_decode(
+    params, x, cache_k, cache_v, step, *,
+    n_heads: int, n_kv: int, head_dim: int,
+    rope_theta: float = 10_000.0,
+    ring: bool = False,
+    window_limit=None,            # traced int or None: SWA mask in a flat cache
+    attn_softcap: Optional[float] = None,
+    query_scale: Optional[float] = None,
+    rope_pos=None,                # RoPE position if it differs from ``step``
+                                  # (e.g. VLM text positions exclude patches)
+):
+    """One-token decode.  ``step`` is the absolute position of the new token.
+
+    Plain cache: slot = step, valid slots are [0, step] (optionally windowed
+    by ``window_limit`` for local layers living in a full-length cache).
+    Ring cache (SWA-everywhere): slot = step % T; every filled slot is valid
+    because the ring length equals the attention window.
+    Returns (out, new_k_cache, new_v_cache).
+    """
+    b, one, _ = x.shape
+    t = cache_k.shape[1]
+    q, k, v = _project_qkv(params, x, n_heads, n_kv, head_dim)
+    pos = jnp.full((b, 1), step if rope_pos is None else rope_pos, jnp.int32)
+    q = apply_rope(q, pos, rope_theta)
+    k = apply_rope(k, pos, rope_theta)
+
+    slot = (step % t) if ring else step  # ring: overwrite the oldest slot
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), slot, axis=1)
+
+    idx = jnp.arange(t)
+    if ring:
+        valid = idx[None, :] <= jnp.minimum(step, t - 1)
+    else:
+        valid = idx[None, :] <= step
+        if window_limit is not None:
+            valid &= idx[None, :] > (step - window_limit)
+    valid = jnp.broadcast_to(valid, (b, t))
+
+    out = decode_attention(q, cache_k, cache_v, valid,
+                           attn_softcap=attn_softcap, scale=query_scale)
+    proj = jnp.einsum("bsh,he->bse", out.reshape(b, 1, n_heads * head_dim),
+                      params["wo"].astype(x.dtype))
+    return proj, cache_k, cache_v
+
+
+# --------------------------------------------------------------------------- #
+# MLA — multi-head latent attention (MiniCPM3 / DeepSeek-V2 style)
+# --------------------------------------------------------------------------- #
+
+def mla_init(key, d_model: int, n_heads: int, *, q_lora: int, kv_lora: int,
+             nope_dim: int, rope_dim: int, v_dim: int):
+    ks = jax.random.split(key, 7)
+    params, axes = {}, {}
+    params["w_dq"], axes["w_dq"] = dense_init(ks[0], d_model, q_lora, "embed", "q_lora")
+    params["w_uq"], axes["w_uq"] = dense_init(
+        ks[1], q_lora, n_heads * (nope_dim + rope_dim), "q_lora", "heads")
+    params["w_dkv"], axes["w_dkv"] = dense_init(ks[2], d_model, kv_lora, "embed", "kv_lora")
+    params["w_kpe"], axes["w_kpe"] = dense_init(ks[3], d_model, rope_dim, "embed", None)
+    params["w_uk"], axes["w_uk"] = dense_init(ks[4], kv_lora, n_heads * nope_dim, "kv_lora", "heads")
+    params["w_uv"], axes["w_uv"] = dense_init(ks[5], kv_lora, n_heads * v_dim, "kv_lora", "heads")
+    params["wo"], axes["wo"] = dense_init(ks[6], n_heads * v_dim, d_model, "heads", "embed")
+    return params, axes
+
+
+def _mla_qkv(params, x, n_heads, nope_dim, rope_dim, v_dim, rope_theta, positions):
+    """Full (non-absorbed) q/k/v materialisation for train/prefill."""
+    b, s, _ = x.shape
+    cq = jnp.einsum("bsd,dq->bsq", x, params["w_dq"].astype(x.dtype))
+    q = jnp.einsum("bsq,qh->bsh", cq, params["w_uq"].astype(x.dtype))
+    q = q.reshape(b, s, n_heads, nope_dim + rope_dim)
+    q_nope, q_pe = q[..., :nope_dim], q[..., nope_dim:]
+
+    c_kv = jnp.einsum("bsd,dc->bsc", x, params["w_dkv"].astype(x.dtype))   # latent
+    k_pe = jnp.einsum("bsd,dr->bsr", x, params["w_kpe"].astype(x.dtype))   # shared
+    k_nope = jnp.einsum("bsc,ch->bsh", c_kv, params["w_uk"].astype(x.dtype))
+    k_nope = k_nope.reshape(b, s, n_heads, nope_dim)
+    v = jnp.einsum("bsc,ch->bsh", c_kv, params["w_uv"].astype(x.dtype))
+    v = v.reshape(b, s, n_heads, v_dim)
+
+    pos = positions if positions is not None else jnp.arange(s)[None, :]
+    q_pe = apply_rope(q_pe, pos, rope_theta)
+    k_pe_r = apply_rope(k_pe[:, :, None, :], pos, rope_theta)              # (b,s,1,r)
+    q_full = jnp.concatenate([q_nope, q_pe], axis=-1)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_pe_r, (b, s, n_heads, rope_dim))], axis=-1)
+    return q_full, k_full, v, c_kv, k_pe_r[:, :, 0, :]
+
+
+def mla_forward(params, x, *, n_heads: int, q_lora: int, kv_lora: int,
+                nope_dim: int, rope_dim: int, v_dim: int,
+                rope_theta: float = 10_000.0, positions=None,
+                chunk: int = 1024):
+    b, s, _ = x.shape
+    q, k, v, c_kv, k_pe = _mla_qkv(
+        params, x, n_heads, nope_dim, rope_dim, v_dim, rope_theta, positions)
+    q = shard(q, "batch", "attn_seq", "heads", None)
+    scale = 1.0 / math.sqrt(nope_dim + rope_dim)
+    out = chunked_attention(q, k, v, causal=True, chunk=chunk, scale=scale)
+    out = shard(out, "batch", "attn_seq", "heads", None)
+    proj = jnp.einsum("bsh,he->bse", out.reshape(b, s, n_heads * v_dim),
+                      params["wo"].astype(x.dtype))
+    return shard(proj, "batch", "seq", "embed"), (c_kv, k_pe)
+
+
+def mla_decode(params, x, cache_ckv, cache_kpe, step, *, n_heads: int,
+               nope_dim: int, rope_dim: int, v_dim: int,
+               rope_theta: float = 10_000.0):
+    """Absorbed-matmul MLA decode: attention runs directly in the latent
+    space, so the cache stays (T, kv_lora + rope_dim) per token — the MLA
+    memory win — and W_uk/W_uv are folded into the query/output paths."""
+    b, one, d = x.shape
+    t = cache_ckv.shape[1]
+    kv_lora = cache_ckv.shape[-1]
+
+    cq = jnp.einsum("bsd,dq->bsq", x, params["w_dq"].astype(x.dtype))
+    q = jnp.einsum("bsq,qh->bsh", cq, params["w_uq"].astype(x.dtype))
+    q = q.reshape(b, 1, n_heads, nope_dim + rope_dim)
+    q_nope, q_pe = q[..., :nope_dim], q[..., nope_dim:]
+
+    pos = jnp.full((b, 1), step, jnp.int32)
+    q_pe = apply_rope(q_pe, pos, rope_theta)
+
+    c_kv_new = jnp.einsum("bsd,dc->bsc", x, params["w_dkv"].astype(x.dtype))
+    k_pe_new = apply_rope(
+        jnp.einsum("bsd,dr->bsr", x, params["w_kpe"].astype(x.dtype))[:, :, None, :],
+        pos, rope_theta)[:, :, 0, :]
+
+    cache_ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache_ckv, c_kv_new.astype(cache_ckv.dtype), step, axis=1)
+    cache_kpe = jax.lax.dynamic_update_slice_in_dim(
+        cache_kpe, k_pe_new.astype(cache_kpe.dtype), step, axis=1)
+
+    # Absorb W_uk into the query: q_lat (b, h, c)
+    w_uk = params["w_uk"].astype(x.dtype).reshape(kv_lora, n_heads, nope_dim)
+    q_lat = jnp.einsum("bshn,chn->bshc", q_nope, w_uk)[:, 0]               # (b,h,c)
+
+    scale = 1.0 / math.sqrt(nope_dim + rope_dim)
+    s_lat = jnp.einsum("bhc,btc->bht", q_lat.astype(cache_ckv.dtype), cache_ckv,
+                       preferred_element_type=jnp.float32)
+    s_pe = jnp.einsum("bhr,btr->bht", q_pe[:, 0].astype(cache_kpe.dtype),
+                      cache_kpe, preferred_element_type=jnp.float32)
+    s = (s_lat + s_pe) * scale
+    valid = (jnp.arange(t)[None, :] <= step)
+    s = jnp.where(valid[:, None, :], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    ctx_lat = jnp.einsum("bht,btc->bhc", p.astype(cache_ckv.dtype), cache_ckv,
+                         preferred_element_type=jnp.float32)  # (b,h,c)
+
+    # Absorb W_uv into the output projection.
+    w_uv = params["w_uv"].astype(x.dtype).reshape(kv_lora, n_heads, v_dim)
+    ctx = jnp.einsum("bhc,chv->bhv", ctx_lat.astype(x.dtype), w_uv)
+    proj = jnp.einsum("bh,he->be",
+                      ctx.reshape(b, n_heads * v_dim), params["wo"].astype(x.dtype))
+    return proj[:, None, :], cache_ckv, cache_kpe
+
+
+# --------------------------------------------------------------------------- #
+# cross-attention (enc-dec)
+# --------------------------------------------------------------------------- #
+
+def cross_attn_forward(params, x, enc_kv, *, n_heads: int, n_kv: int, head_dim: int,
+                       chunk: int = 1024):
+    """Decoder->encoder attention; enc_kv = (k, v) precomputed from encoder."""
+    b, s, _ = x.shape
+    k, v = enc_kv
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"].astype(x.dtype)).reshape(
+        b, s, n_heads, head_dim)
+    q = shard(q, "batch", "attn_seq", "heads", None)
+    out = chunked_attention(q, k, v, causal=False, chunk=min(chunk, k.shape[1]))
+    proj = jnp.einsum("bsh,he->bse", out.reshape(b, s, n_heads * head_dim),
+                      params["wo"].astype(x.dtype))
+    return shard(proj, "batch", "seq", "embed")
+
+
+def cross_kv(params, enc_out, *, n_kv: int, head_dim: int):
+    b, s, _ = enc_out.shape
+    k = jnp.einsum("bsd,dh->bsh", enc_out, params["wk"].astype(enc_out.dtype)).reshape(
+        b, s, n_kv, head_dim)
+    v = jnp.einsum("bsd,dh->bsh", enc_out, params["wv"].astype(enc_out.dtype)).reshape(
+        b, s, n_kv, head_dim)
+    return k, v

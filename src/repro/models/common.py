@@ -1,0 +1,247 @@
+"""Shared building blocks for every architecture: parameter construction with
+logical axes, norms, MLPs, rotary embeddings, softcap, embeddings.
+
+Parameter convention
+--------------------
+``init`` functions return ``(params, axes)`` — two parallel pytrees, where
+``axes`` holds a tuple of logical axis names (see distributed/partitioning)
+per array leaf.  ``axes_to_pspecs`` converts the axes tree into the
+PartitionSpec tree handed to pjit.  Stacked (scanned) layers prepend a
+"layers" axis to both trees.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..distributed.partitioning import logical_to_spec, shard
+
+Params = Dict[str, Any]
+Axes = Dict[str, Any]
+
+DTYPE = jnp.bfloat16      # activation/weight dtype on the wire
+PARAM_DTYPE = jnp.float32  # master weights
+
+# ---------------------------------------------------------------------------
+# cost-probe mode: XLA's cost analysis counts while-loop bodies ONCE, so the
+# dry-run's cost probe recompiles reduced-depth configs with every lax.scan
+# fully unrolled (see launch/dryrun.py).  Model code asks scan_unroll() at
+# each scan site.
+# ---------------------------------------------------------------------------
+import threading as _threading
+
+_probe = _threading.local()
+
+
+def set_probe_unroll(on: bool) -> None:
+    _probe.on = bool(on)
+
+
+def scan_unroll():
+    return True if getattr(_probe, "on", False) else 1
+
+
+# --------------------------------------------------------------------------- #
+# parameter construction
+# --------------------------------------------------------------------------- #
+
+def dense_init(key, in_dim: int, out_dim: int, in_ax: Optional[str],
+               out_ax: Optional[str], scale: Optional[float] = None):
+    """Weight (in, out) with truncated-normal fan-in init + logical axes."""
+    scale = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    w = jax.random.truncated_normal(key, -2.0, 2.0, (in_dim, out_dim), PARAM_DTYPE) * scale
+    return w, (in_ax, out_ax)
+
+
+def stacked(keys, fn, *args, **kwargs):
+    """Initialise ``fn`` once per layer key and stack leaves on axis 0,
+    prepending the 'layers' logical axis."""
+    outs = [fn(k, *args, **kwargs) for k in keys]
+    params = jax.tree.map(lambda *xs: jnp.stack(xs), *[p for p, _ in outs])
+    axes = jax.tree.map(
+        lambda ax: ("layers",) + tuple(ax),
+        outs[0][1],
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x),
+    )
+    return params, axes
+
+
+def axes_to_pspecs(axes_tree, rules=None):
+    """Convert a logical-axes tree into a PartitionSpec tree."""
+    def is_axes(x):
+        return isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)
+    return jax.tree.map(lambda ax: logical_to_spec(ax, rules), axes_tree, is_leaf=is_axes)
+
+
+def cast_params(params, dtype=DTYPE):
+    return jax.tree.map(lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, params)
+
+
+# --------------------------------------------------------------------------- #
+# normalisation / activations
+# --------------------------------------------------------------------------- #
+
+def rmsnorm_init(dim: int):
+    return jnp.ones((dim,), PARAM_DTYPE), (None,)
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def softcap(x, cap: Optional[float]):
+    """Gemma-2 style logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# --------------------------------------------------------------------------- #
+# MLPs
+# --------------------------------------------------------------------------- #
+
+def mlp_init(key, d_model: int, d_ff: int, gated: bool = True):
+    k1, k2, k3 = jax.random.split(key, 3)
+    params: Params = {}
+    axes: Axes = {}
+    params["w_in"], axes["w_in"] = dense_init(k1, d_model, d_ff, "embed", "ff")
+    if gated:
+        params["w_gate"], axes["w_gate"] = dense_init(k2, d_model, d_ff, "embed", "ff")
+    params["w_out"], axes["w_out"] = dense_init(k3, d_ff, d_model, "ff", "embed")
+    return params, axes
+
+
+def mlp_apply(params, x, act=jax.nn.silu):
+    """(Gated-)MLP with TP-friendly sharding constraints."""
+    h = jnp.einsum("...d,df->...f", x, params["w_in"].astype(x.dtype))
+    if "w_gate" in params:
+        g = jnp.einsum("...d,df->...f", x, params["w_gate"].astype(x.dtype))
+        h = act(g) * h
+    else:
+        h = act(h)
+    h = shard(h, "batch", "mlp_seq", "ff")
+    out = jnp.einsum("...f,fd->...d", h, params["w_out"].astype(x.dtype))
+    return shard(out, "batch", "seq", "embed")
+
+
+# --------------------------------------------------------------------------- #
+# rotary position embeddings (standard + M-RoPE)
+# --------------------------------------------------------------------------- #
+
+def rope_freqs(head_dim: int, theta: float = 10_000.0):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                                  # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * inv      # (..., S, hd/2)
+    sin = jnp.sin(ang)[..., :, None, :]                          # (..., S, 1, hd/2)
+    cos = jnp.cos(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, sections: Tuple[int, int, int], theta: float = 1_000_000.0):
+    """Qwen2-VL multimodal RoPE.
+
+    x: (..., S, H, hd); positions3: (..., S, 3) temporal/height/width ids.
+    ``sections`` partitions the hd/2 frequency bands among the 3 position
+    streams (e.g. (16, 24, 24) for hd=128).
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    assert sum(sections) == half, (sections, hd)
+    inv = rope_freqs(hd, theta)                                  # (half,)
+    # pick which position stream drives each frequency band
+    sec_id = jnp.repeat(jnp.arange(3), jnp.array(sections), total_repeat_length=half)
+    gather_ix = jnp.broadcast_to(sec_id, positions3.shape[:-1] + (half,)).astype(jnp.int32)
+    pos = jnp.take_along_axis(positions3.astype(jnp.float32), gather_ix, axis=-1)
+    # (..., S, half)
+    ang = pos * inv
+    sin = jnp.sin(ang)[..., :, None, :]
+    cos = jnp.cos(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# embeddings / unembedding
+# --------------------------------------------------------------------------- #
+
+def embedding_init(key, vocab: int, d_model: int):
+    w = jax.random.normal(key, (vocab, d_model), PARAM_DTYPE) * 0.02
+    return w, ("vocab", "embed")
+
+
+def embed(params_w, tokens, scale_by_dim: bool = False):
+    out = jnp.take(params_w.astype(DTYPE), tokens, axis=0)
+    if scale_by_dim:
+        out = out * math.sqrt(params_w.shape[1])
+    return shard(out, "batch", "seq", "embed")
+
+
+def unembed(params_w, x, cap: Optional[float] = None):
+    logits = jnp.einsum("...d,vd->...v", x, params_w.astype(x.dtype))
+    logits = softcap(logits.astype(jnp.float32), cap)
+    return shard(logits, "batch", "logit_seq", "vocab")
+
+
+# --------------------------------------------------------------------------- #
+# losses
+# --------------------------------------------------------------------------- #
+
+def chunked_softmax_cross_entropy(x, w_un, labels, *, cap: Optional[float] = None,
+                                  z_loss: float = 1e-4, seq_chunk: int = 512):
+    """Cross-entropy that never materialises the full (B, S, V) logits.
+
+    The unembed + CE runs per sequence-chunk under ``jax.checkpoint``: peak
+    logits memory drops from O(S·V) to O(seq_chunk·V), the dominant buffer
+    for 256k-vocab models at 4k+ context (the backward pass recomputes each
+    chunk's logits, costing one extra unembed matmul — a good trade).
+    """
+    b, s, d = x.shape
+    if s % seq_chunk or s <= seq_chunk:
+        logits = unembed(w_un, x, cap=cap)
+        return softmax_cross_entropy(logits, labels, z_loss)
+    nc = s // seq_chunk
+    xc = x.reshape(b, nc, seq_chunk, d).swapaxes(0, 1)        # (nc, b, c, d)
+    lc = labels.reshape(b, nc, seq_chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        xi, li = xs
+        logits = unembed(w_un, xi, cap=cap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        piece = (lse - ll) + (z_loss * jnp.square(lse) if z_loss else 0.0)
+        return carry + piece.sum(), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xc, lc),
+                            unroll=scan_unroll())
+    return total / (b * s)
+
+
+def softmax_cross_entropy(logits, labels, z_loss: float = 1e-4):
+    """Token-mean CE with an optional z-loss regulariser (stabilises the
+    softmax normaliser at scale; standard in production LM training)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse)
+    return loss.mean()

@@ -1,0 +1,187 @@
+"""Encoder-decoder stack (seamless-m4t backbone).
+
+Encoder: bidirectional self-attention over stub modality embeddings (the
+speech frontend provides precomputed frame embeddings per the brief).
+Decoder: causal self-attention + cross-attention to the encoder output.
+Both stacks scan over stacked layer params.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.partitioning import shard
+from .attention import (
+    chunked_attention,
+    cross_attn_forward,
+    cross_kv,
+    gqa_decode,
+    gqa_forward,
+    gqa_init,
+)
+from .common import (DTYPE, embed, embedding_init, mlp_apply, mlp_init,
+                     rmsnorm, rmsnorm_init, scan_unroll, unembed)
+from .transformer import BIG_WINDOW
+
+
+def encdec_init(key, cfg: ModelConfig):
+    from .common import stacked  # local import to avoid cycle surprises
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        p, a = {}, {}
+        p["ln1"], a["ln1"] = rmsnorm_init(cfg.d_model)
+        p["attn"], a["attn"] = gqa_init(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd)
+        p["ln2"], a["ln2"] = rmsnorm_init(cfg.d_model)
+        p["mlp"], a["mlp"] = mlp_init(k2, cfg.d_model, cfg.d_ff, gated=False)
+        return p, a
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        p, a = {}, {}
+        p["ln1"], a["ln1"] = rmsnorm_init(cfg.d_model)
+        p["attn"], a["attn"] = gqa_init(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd)
+        p["lnx"], a["lnx"] = rmsnorm_init(cfg.d_model)
+        p["xattn"], a["xattn"] = gqa_init(k2, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd)
+        p["ln2"], a["ln2"] = rmsnorm_init(cfg.d_model)
+        p["mlp"], a["mlp"] = mlp_init(k3, cfg.d_model, cfg.d_ff, gated=False)
+        return p, a
+
+    keys = jax.random.split(key, cfg.enc_layers + cfg.n_layers + 3)
+    params, axes = {}, {}
+    params["embed"], axes["embed"] = embedding_init(keys[0], cfg.padded_vocab, cfg.d_model)
+    params["enc_layers"], axes["enc_layers"] = stacked(
+        list(keys[1:1 + cfg.enc_layers]), enc_layer)
+    params["dec_layers"], axes["dec_layers"] = stacked(
+        list(keys[1 + cfg.enc_layers:1 + cfg.enc_layers + cfg.n_layers]), dec_layer)
+    params["enc_norm"], axes["enc_norm"] = rmsnorm_init(cfg.d_model)
+    params["final_norm"], axes["final_norm"] = rmsnorm_init(cfg.d_model)
+    return params, axes
+
+
+def encode(params, cfg: ModelConfig, frames: jax.Array, *, chunk=1024) -> jax.Array:
+    """frames: (B, Se, D) stub embeddings -> encoder output (B, Se, D)."""
+    x = shard(frames.astype(DTYPE), "batch", "seq", "embed")
+
+    def body(h, xs):
+        (p_l,) = xs
+        hn = rmsnorm(h, p_l["ln1"], cfg.rms_eps)
+        attn_out, _ = gqa_forward(
+            p_l["attn"], hn, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            head_dim=cfg.hd, rope_theta=cfg.rope_theta, causal=False,
+            chunk=chunk)
+        h = h + attn_out
+        hn = rmsnorm(h, p_l["ln2"], cfg.rms_eps)
+        return h + mlp_apply(p_l["mlp"], hn, act=jax.nn.gelu), None
+
+    fn = jax.checkpoint(body) if cfg.remat == "full" else body
+    x, _ = jax.lax.scan(fn, x, (params["enc_layers"],), unroll=scan_unroll())
+    return rmsnorm(x, params["enc_norm"], cfg.rms_eps)
+
+
+def _dec_layer_fwd(p_l, cfg: ModelConfig, h, enc_out, *, chunk, collect=False):
+    hn = rmsnorm(h, p_l["ln1"], cfg.rms_eps)
+    attn_out, kv = gqa_forward(
+        p_l["attn"], hn, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+        head_dim=cfg.hd, rope_theta=cfg.rope_theta, causal=True, chunk=chunk)
+    h = h + attn_out
+    hn = rmsnorm(h, p_l["lnx"], cfg.rms_eps)
+    ckv = cross_kv(p_l["xattn"], enc_out, n_kv=cfg.n_kv_heads, head_dim=cfg.hd)
+    h = h + cross_attn_forward(
+        p_l["xattn"], hn, ckv, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+        head_dim=cfg.hd, chunk=chunk)
+    hn = rmsnorm(h, p_l["ln2"], cfg.rms_eps)
+    h = h + mlp_apply(p_l["mlp"], hn, act=jax.nn.gelu)
+    return (h, kv, ckv) if collect else h
+
+
+def encdec_forward(params, cfg: ModelConfig, frames, tokens, *, chunk=1024,
+                   logits_slice: Optional[str] = None):
+    """Training forward: returns (decoder logits, aux=0)."""
+    enc_out = encode(params, cfg, frames, chunk=chunk)
+    x = embed(params["embed"], tokens)
+
+    def body(h, xs):
+        (p_l,) = xs
+        return _dec_layer_fwd(p_l, cfg, h, enc_out, chunk=chunk), None
+
+    fn = jax.checkpoint(body) if cfg.remat == "full" else body
+    x, _ = jax.lax.scan(fn, x, (params["dec_layers"],), unroll=scan_unroll())
+    x = rmsnorm(x, params["final_norm"], cfg.rms_eps)
+    if logits_slice == "hidden":
+        return x, jnp.zeros((), jnp.float32)
+    if logits_slice == "last":
+        x = x[:, -1:, :]
+    logits = unembed(params["embed"], x)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def encdec_prefill(params, cfg: ModelConfig, frames, tokens, cache_len: int,
+                   *, chunk=1024):
+    """Encode + run the decoder prompt; build self- and cross-attn caches."""
+    enc_out = encode(params, cfg, frames, chunk=chunk)
+    x = embed(params["embed"], tokens)
+    s = tokens.shape[1]
+
+    def body(h, xs):
+        (p_l,) = xs
+        h, kv, ckv = _dec_layer_fwd(p_l, cfg, h, enc_out, chunk=chunk, collect=True)
+        return h, (kv[0], kv[1], ckv[0], ckv[1])
+
+    x, (ks, vs, cks, cvs) = jax.lax.scan(body, x, (params["dec_layers"],),
+                                         unroll=scan_unroll())
+    x = rmsnorm(x, params["final_norm"], cfg.rms_eps)
+    logits = unembed(params["embed"], x[:, -1:, :])
+
+    L, b = cfg.n_layers, tokens.shape[0]
+    k_cache = jnp.zeros((L, b, cache_len, cfg.n_kv_heads, cfg.hd), DTYPE)
+    v_cache = jnp.zeros_like(k_cache)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, ks.astype(DTYPE), 0, axis=2)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, vs.astype(DTYPE), 0, axis=2)
+    cache = {"k": k_cache, "v": v_cache,
+             "ck": cks.astype(DTYPE), "cv": cvs.astype(DTYPE)}
+    return logits, cache
+
+
+def encdec_decode_step(params, cfg: ModelConfig, cache, tokens, step):
+    x = embed(params["embed"], tokens)
+
+    def body(h, xs):
+        p_l, k_l, v_l, ck_l, cv_l = xs
+        hn = rmsnorm(h, p_l["ln1"], cfg.rms_eps)
+        attn_out, k_n, v_n = gqa_decode(
+            p_l["attn"], hn, k_l, v_l, step, n_heads=cfg.n_heads,
+            n_kv=cfg.n_kv_heads, head_dim=cfg.hd, rope_theta=cfg.rope_theta)
+        h = h + attn_out
+        hn = rmsnorm(h, p_l["lnx"], cfg.rms_eps)
+        h = h + cross_attn_forward(
+            p_l["xattn"], hn, (ck_l, cv_l), n_heads=cfg.n_heads,
+            n_kv=cfg.n_kv_heads, head_dim=cfg.hd, chunk=ck_l.shape[1])
+        hn = rmsnorm(h, p_l["ln2"], cfg.rms_eps)
+        h = h + mlp_apply(p_l["mlp"], hn, act=jax.nn.gelu)
+        return h, (k_n, v_n)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["ck"], cache["cv"]), unroll=scan_unroll())
+    x = rmsnorm(x, params["final_norm"], cfg.rms_eps)
+    logits = unembed(params["embed"], x)
+    new_cache = {"k": k_new, "v": v_new, "ck": cache["ck"], "cv": cache["cv"]}
+    return logits, new_cache
+
+
+def encdec_cache_spec(cfg: ModelConfig, batch: int, cache_len: int, enc_len: int):
+    L = cfg.n_layers
+    return {
+        "k": ((L, batch, cache_len, cfg.n_kv_heads, cfg.hd),
+              ("layers", "batch", "kv_len", "kv_heads", None)),
+        "v": ((L, batch, cache_len, cfg.n_kv_heads, cfg.hd),
+              ("layers", "batch", "kv_len", "kv_heads", None)),
+        "ck": ((L, batch, enc_len, cfg.n_kv_heads, cfg.hd),
+               ("layers", "batch", "kv_len", "kv_heads", None)),
+        "cv": ((L, batch, enc_len, cfg.n_kv_heads, cfg.hd),
+               ("layers", "batch", "kv_len", "kv_heads", None)),
+    }

@@ -1,0 +1,224 @@
+"""Unified model facade: one object per architecture config exposing
+
+    init / forward / loss / prefill / decode_step / init_cache /
+    input_specs / input_axes / param_count
+
+so the trainer, server, dry-run and smoke tests never dispatch on family
+themselves.  All heavy lifting lives in transformer.py / encdec.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig, ShapeConfig
+from .common import (DTYPE, axes_to_pspecs, chunked_softmax_cross_entropy,
+                     softmax_cross_entropy)
+from . import encdec as ed
+from . import transformer as tf
+
+__all__ = ["Model", "build_model"]
+
+
+def _vlm_positions3(batch: int, n_patches: int, seq_total: int, grid: int):
+    """M-RoPE position ids: image patches get (t=0, h, w) grid coords; text
+    continues temporally after the image."""
+    p_h = jnp.arange(n_patches) // grid
+    p_w = jnp.arange(n_patches) % grid
+    img = jnp.stack([jnp.zeros(n_patches, jnp.int32), p_h, p_w], axis=-1)
+    s_text = seq_total - n_patches
+    t0 = grid  # text starts after the image's spatial extent
+    txt_pos = t0 + jnp.arange(s_text, dtype=jnp.int32)
+    txt = jnp.stack([txt_pos] * 3, axis=-1)
+    pos = jnp.concatenate([img, txt], axis=0).astype(jnp.int32)
+    return jnp.broadcast_to(pos[None], (batch, seq_total, 3))
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ----------------------------- init -------------------------------- #
+    def init(self, rng) -> Tuple[Any, Any]:
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return ed.encdec_init(rng, cfg)
+        if cfg.family == "hybrid":
+            return tf.hybrid_init(rng, cfg)
+        return tf.decoder_init(rng, cfg)
+
+    def param_pspecs(self, rules=None):
+        holder = {}
+        def _init(k):
+            params, ax = self.init(k)
+            holder["axes"] = ax
+            return params
+        jax.eval_shape(_init, jax.random.key(0))
+        return axes_to_pspecs(holder["axes"], rules)
+
+    # --------------------------- forward -------------------------------- #
+    def _vlm_embed(self, params, batch):
+        cfg = self.cfg
+        tok_emb = jnp.take(params["embed"].astype(DTYPE), batch["tokens"], axis=0)
+        x = jnp.concatenate([batch["patches"].astype(DTYPE), tok_emb], axis=1)
+        return x
+
+    def forward(self, params, batch, *, chunk: Optional[int] = None,
+                logits_slice: Optional[str] = None):
+        """Training forward; returns (logits, aux_loss)."""
+        cfg = self.cfg
+        chunk = chunk or cfg.attn_chunk
+        if cfg.family == "encdec":
+            return ed.encdec_forward(params, cfg, batch["frames"], batch["tokens"],
+                                     chunk=chunk, logits_slice=logits_slice)
+        if cfg.family == "hybrid":
+            return tf.hybrid_forward(params, cfg, batch["tokens"], chunk=chunk,
+                                     logits_slice=logits_slice)
+        if cfg.family == "vlm":
+            x = self._vlm_embed(params, batch)
+            s_total = x.shape[1]
+            grid = int(math.sqrt(cfg.n_patches))
+            pos3 = _vlm_positions3(x.shape[0], cfg.n_patches, s_total, grid)
+            return tf.decoder_forward(params, cfg, x_embed=x, positions3=pos3,
+                                      chunk=chunk, logits_slice=logits_slice)
+        return tf.decoder_forward(params, cfg, batch["tokens"], chunk=chunk,
+                                  logits_slice=logits_slice)
+
+    def loss(self, params, batch, *, chunk: Optional[int] = None):
+        """Token-mean CE via the chunked unembed (big-vocab memory path)."""
+        cfg = self.cfg
+        hidden, aux = self.forward(params, batch, chunk=chunk,
+                                   logits_slice="hidden")
+        if cfg.family == "vlm":
+            hidden = hidden[:, cfg.n_patches:, :]
+        w_un = params.get("unembed", params["embed"]) if not cfg.tie_embeddings             else params["embed"]
+        ce = chunked_softmax_cross_entropy(
+            hidden, w_un, batch["labels"], cap=cfg.final_softcap)
+        return ce + 0.01 * aux
+
+    # --------------------------- serving -------------------------------- #
+    def prefill(self, params, batch, cache_len: int, *, chunk: Optional[int] = None):
+        cfg = self.cfg
+        chunk = chunk or cfg.attn_chunk
+        if cfg.family == "encdec":
+            return ed.encdec_prefill(params, cfg, batch["frames"], batch["tokens"],
+                                     cache_len, chunk=chunk)
+        if cfg.family == "hybrid":
+            return tf.hybrid_prefill(params, cfg, batch["tokens"], cache_len,
+                                     chunk=chunk)
+        if cfg.family == "vlm":
+            x = self._vlm_embed(params, batch)
+            s_total = x.shape[1]
+            grid = int(math.sqrt(cfg.n_patches))
+            pos3 = _vlm_positions3(x.shape[0], cfg.n_patches, s_total, grid)
+            return tf.decoder_prefill(params, cfg, x_embed=x, cache_len=cache_len,
+                                      positions3=pos3, chunk=chunk)
+        return tf.decoder_prefill(params, cfg, batch["tokens"],
+                                  cache_len=cache_len, chunk=chunk)
+
+    def decode_step(self, params, cache, tokens, step):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return ed.encdec_decode_step(params, cfg, cache, tokens, step)
+        if cfg.family == "hybrid":
+            return tf.hybrid_decode_step(params, cfg, cache, tokens, step)
+        rope_pos = None
+        if cfg.family == "vlm":
+            # M-RoPE text stream: positions continue at grid offset after the
+            # image block, not at the raw sequence index (see _vlm_positions3).
+            grid = int(math.sqrt(cfg.n_patches))
+            rope_pos = step - cfg.n_patches + grid
+        return tf.decoder_decode_step(params, cfg, cache, tokens, step,
+                                      rope_pos=rope_pos)
+
+    # --------------------------- caches --------------------------------- #
+    def init_cache(self, batch: int, cache_len: int, *, enc_len: Optional[int] = None,
+                   abstract: bool = False):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            spec = ed.encdec_cache_spec(cfg, batch, cache_len, enc_len or cache_len)
+            if abstract:
+                return {k: jax.ShapeDtypeStruct(s, DTYPE) for k, (s, _) in spec.items()}
+            return {k: jnp.zeros(s, DTYPE) for k, (s, _) in spec.items()}
+        return tf.init_cache(cfg, batch, cache_len, abstract=abstract)
+
+    def cache_logical_axes(self, batch: int, cache_len: int, *, enc_len=None):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            spec = ed.encdec_cache_spec(cfg, batch, cache_len, enc_len or cache_len)
+            return {k: ax for k, (s, ax) in spec.items()}
+        return tf.cache_axes(cfg, batch, cache_len)
+
+    # --------------------------- input specs ----------------------------- #
+    def input_specs(self, shape: ShapeConfig, *, enc_len: Optional[int] = None
+                    ) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for the dry-run (no allocation)."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        sd = jax.ShapeDtypeStruct
+        if shape.kind == "train":
+            if cfg.family == "encdec":
+                return {"frames": sd((b, s, cfg.d_model), DTYPE),
+                        "tokens": sd((b, s), i32), "labels": sd((b, s), i32)}
+            if cfg.family == "vlm":
+                s_text = s - cfg.n_patches
+                return {"patches": sd((b, cfg.n_patches, cfg.d_model), DTYPE),
+                        "tokens": sd((b, s_text), i32),
+                        "labels": sd((b, s_text), i32)}
+            return {"tokens": sd((b, s), i32), "labels": sd((b, s), i32)}
+        if shape.kind == "prefill":
+            if cfg.family == "encdec":
+                return {"frames": sd((b, s, cfg.d_model), DTYPE),
+                        "tokens": sd((b, 1), i32)}
+            if cfg.family == "vlm":
+                s_text = s - cfg.n_patches
+                return {"patches": sd((b, cfg.n_patches, cfg.d_model), DTYPE),
+                        "tokens": sd((b, s_text), i32)}
+            return {"tokens": sd((b, s), i32)}
+        # decode: one new token against a cache of seq_len
+        return {"tokens": sd((b, 1), i32)}
+
+    def input_logical_axes(self, shape: ShapeConfig) -> Dict[str, Tuple]:
+        cfg = self.cfg
+        if shape.kind == "train":
+            if cfg.family == "encdec":
+                return {"frames": ("batch", "seq", "embed"),
+                        "tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+            if cfg.family == "vlm":
+                return {"patches": ("batch", "seq", "embed"),
+                        "tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+            return {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+        if shape.kind == "prefill":
+            if cfg.family == "encdec":
+                return {"frames": ("batch", "seq", "embed"), "tokens": ("batch", None)}
+            if cfg.family == "vlm":
+                return {"patches": ("batch", "seq", "embed"), "tokens": ("batch", "seq")}
+            return {"tokens": ("batch", "seq")}
+        return {"tokens": ("batch", None)}
+
+    # --------------------------- accounting ------------------------------ #
+    def param_count(self, params=None) -> int:
+        if params is None:
+            params = jax.eval_shape(lambda k: self.init(k)[0], jax.random.key(0))
+        return int(sum(np.prod(x.shape) for x in jax.tree.leaves(params)))
+
+    def active_param_count(self, params=None) -> int:
+        """MoE: params touched per token (top_k of n_experts)."""
+        cfg = self.cfg
+        total = self.param_count(params)
+        if not cfg.n_experts:
+            return total
+        expert_p = 3 * cfg.d_model * cfg.d_ff  # w_in, w_gate, w_out per expert
+        moe_total = cfg.n_layers * cfg.n_experts * expert_p
+        moe_active = cfg.n_layers * cfg.top_k * expert_p
+        return total - moe_total + moe_active
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,128 @@
+"""Mixture-of-Experts layer: top-k router + GROUPED sort-based dispatch.
+
+Dispatch strategy (production-critical). Two earlier designs failed the
+dry-run at scale and are kept here for the record (EXPERIMENTS.md §Perf):
+
+* v0 — GShard one-hot dispatch tensor (T, E, C): O(T^2 k / E) memory;
+  1.9 TiB/device for mixtral train_4k.
+* v1 — global flat route-sort over all T = B*S tokens: right asymptotics,
+  but the global argsort/gather/scatter crosses the batch sharding, so GSPMD
+  replicates — 186 GiB/device and a 147 s collective term.
+
+v2 (this file) — GROUPED routing, groups = batch rows (exactly GShard's
+group dimension): every row of the batch routes its own S*k (token, slot)
+pairs with a per-row capacity C = ceil(S*k*cf/E).  All sorting, position
+computation, scatter and combine are per-row -> fully local to the data
+shard; the ONLY cross-device movement is the (B, E, C, D) expert buffer
+resharding when experts are model-sharded — which IS the EP all-to-all.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.partitioning import shard
+from .common import dense_init
+
+
+def moe_init(key, d_model: int, d_ff: int, n_experts: int):
+    kr, k1, k2, k3 = jax.random.split(key, 4)
+    params, axes = {}, {}
+    params["router"], axes["router"] = dense_init(kr, d_model, n_experts, "embed", None)
+    scale = 1.0 / math.sqrt(d_model)
+    params["w_in"] = jax.random.truncated_normal(
+        k1, -2, 2, (n_experts, d_model, d_ff), jnp.float32) * scale
+    axes["w_in"] = ("experts", "embed", "expert_ff")
+    params["w_gate"] = jax.random.truncated_normal(
+        k2, -2, 2, (n_experts, d_model, d_ff), jnp.float32) * scale
+    axes["w_gate"] = ("experts", "embed", "expert_ff")
+    params["w_out"] = jax.random.truncated_normal(
+        k3, -2, 2, (n_experts, d_ff, d_model), jnp.float32) * (1.0 / math.sqrt(d_ff))
+    axes["w_out"] = ("experts", "expert_ff", "embed")
+    return params, axes
+
+
+def moe_apply(
+    params, x, *,
+    n_experts: int,
+    top_k: int = 2,
+    capacity_factor: float = 1.25,
+    act=jax.nn.silu,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output, aux_loss).  x: (B, S, D); groups = batch rows."""
+    b, s, d = x.shape
+    e = n_experts
+
+    logits = jnp.einsum("bsd,de->bse", x, params["router"].astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)          # (B,S,E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)                    # (B,S,k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    capacity = max(1, int(math.ceil(s * top_k * capacity_factor / e)))
+    p = s * top_k                                                        # pairs/row
+
+    # ---- per-row route sort (local to the batch shard) ------------------ #
+    flat_e = gate_idx.reshape(b, p)                                      # (B,P)
+    flat_tok = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(s, dtype=jnp.int32), top_k)[None], (b, p))
+    flat_gate = gate_vals.reshape(b, p)
+
+    order = jnp.argsort(flat_e, axis=-1, stable=True)                    # (B,P)
+    e_sorted = jnp.take_along_axis(flat_e, order, axis=-1)
+    tok_sorted = jnp.take_along_axis(flat_tok, order, axis=-1)
+    gate_sorted = jnp.take_along_axis(flat_gate, order, axis=-1)
+
+    # position inside each expert's buffer: running index - expert start
+    onehot_counts = jax.nn.one_hot(e_sorted, e, dtype=jnp.int32).sum(axis=1)  # (B,E)
+    starts = jnp.concatenate(
+        [jnp.zeros((b, 1), jnp.int32),
+         jnp.cumsum(onehot_counts, axis=-1)[:, :-1]], axis=-1)           # (B,E)
+    pos = jnp.arange(p, dtype=jnp.int32)[None, :] - jnp.take_along_axis(
+        starts, e_sorted, axis=-1)
+    keep = pos < capacity
+    pos_c = jnp.where(keep, pos, 0)
+
+    # ---- scatter into (B, E, C, D) --------------------------------------- #
+    # vmap over the batch row so the scatter carries an explicit batching
+    # dim: GSPMD keeps it local to the data shard (a flat 3-index scatter
+    # defeats sharding propagation and replicates — v1 lesson).
+    gathered = jnp.take_along_axis(x, tok_sorted[..., None], axis=1)     # (B,P,D)
+    upd = jnp.where(keep[..., None], gathered, 0).astype(x.dtype)
+
+    def _scatter_row(ei, pi, ui):
+        return jnp.zeros((e, capacity, d), ui.dtype).at[ei, pi].add(ui)
+
+    expert_in = jax.vmap(_scatter_row)(e_sorted, pos_c, upd)
+    expert_in = shard(expert_in, "batch", "experts", None, "embed")
+
+    # ---- expert FFNs (EP all-to-all emerges here when E is sharded) ----- #
+    h = jnp.einsum("becd,edf->becf", expert_in, params["w_in"].astype(x.dtype))
+    g = jnp.einsum("becd,edf->becf", expert_in, params["w_gate"].astype(x.dtype))
+    h = act(g) * h
+    h = shard(h, "batch", "experts", None, "expert_ff")
+    expert_out = jnp.einsum("becf,efd->becd", h, params["w_out"].astype(x.dtype))
+    expert_out = shard(expert_out, "batch", "experts", None, "embed")
+
+    # ---- combine (local gather + per-row scatter-add) -------------------- #
+    def _gather_row(eo, ei, pi):
+        return eo[ei, pi]
+
+    pair_out = jax.vmap(_gather_row)(expert_out, e_sorted, pos_c)        # (B,P,D)
+    pair_out = jnp.where(keep[..., None], pair_out, 0)
+    pair_out = pair_out * gate_sorted[..., None].astype(x.dtype)
+
+    def _combine_row(ti, po):
+        return jnp.zeros((s, d), po.dtype).at[ti].add(po)
+
+    out = jax.vmap(_combine_row)(tok_sorted, pair_out)
+    out = shard(out, "batch", "seq", "embed")
+
+    # load-balancing auxiliary loss (Switch): E * sum_e f_e * p_e
+    me = probs.mean(axis=(0, 1))
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)
+    ce = onehot.sum(axis=2).mean(axis=(0, 1)) / top_k
+    aux = e * jnp.sum(me * ce)
+    return out, aux

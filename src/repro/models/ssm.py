@@ -1,0 +1,248 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Training uses the chunked SSD algorithm: within a chunk the recurrence is
+evaluated in its quadratic 'attention' dual form (MXU-friendly), and chunk
+states are threaded through a ``lax.scan`` — O(S * chunk) work with constant
+memory per chunk.  Decode is the exact single-step SSM recurrence with a
+constant-size (H, P, N) state plus a small causal-conv tail — which is why
+SSM/hybrid architectures keep the ``long_500k`` shape feasible.
+
+Sharding layout (DESIGN.md §6): the inner dimension is kept factored as
+(H heads, P head-dim) everywhere and the model axis shards P (64 % 16 == 0
+for every assigned config), so z/x/out projections, the causal conv and all
+SSD einsums shard conflict-free; B/C/dt are small and replicated.  The input
+projection is SPLIT per component (z, x, B, C, dt) rather than fused, so no
+shard ever straddles a component boundary.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.partitioning import shard
+from .common import dense_init, scan_unroll
+
+CONV_K = 4
+
+
+def mamba2_init(key, d_model: int, *, expand: int = 2, head_p: int = 64,
+                state: int = 128):
+    d_inner = expand * d_model
+    n_heads = d_inner // head_p
+    ks = jax.random.split(key, 8)
+    params, axes = {}, {}
+    scale = 1.0 / math.sqrt(d_model)
+
+    def hp_proj(k):  # (d_model, H, P) projection sharded on P
+        w = jax.random.truncated_normal(k, -2, 2, (d_model, n_heads, head_p),
+                                        jnp.float32) * scale
+        return w, ("embed", None, "ssm_inner")
+
+    params["w_z"], axes["w_z"] = hp_proj(ks[0])
+    params["w_x"], axes["w_x"] = hp_proj(ks[1])
+    params["w_b"], axes["w_b"] = dense_init(ks[2], d_model, state, "embed", None)
+    params["w_c"], axes["w_c"] = dense_init(ks[3], d_model, state, "embed", None)
+    params["w_dt"], axes["w_dt"] = dense_init(ks[4], d_model, n_heads, "embed", None)
+    params["conv_x"] = jax.random.normal(ks[5], (CONV_K, n_heads, head_p), jnp.float32) * 0.1
+    axes["conv_x"] = (None, None, "ssm_inner")
+    params["conv_b"] = jax.random.normal(ks[6], (CONV_K, state), jnp.float32) * 0.1
+    axes["conv_b"] = (None, None)
+    params["conv_c"] = jax.random.normal(ks[7], (CONV_K, state), jnp.float32) * 0.1
+    axes["conv_c"] = (None, None)
+    params["A_log"] = jnp.log(jnp.linspace(1.0, 16.0, n_heads).astype(jnp.float32))
+    axes["A_log"] = (None,)
+    params["dt_bias"] = jnp.zeros((n_heads,), jnp.float32)
+    axes["dt_bias"] = (None,)
+    params["D"] = jnp.ones((n_heads,), jnp.float32)
+    axes["D"] = (None,)
+    params["norm"] = jnp.ones((n_heads, head_p), jnp.float32)
+    axes["norm"] = (None, "ssm_inner")
+    w_out = jax.random.truncated_normal(
+        ks[0], -2, 2, (n_heads, head_p, d_model), jnp.float32) / math.sqrt(d_inner)
+    params["w_out"] = w_out
+    axes["w_out"] = (None, "ssm_inner", "embed")
+    return params, axes
+
+
+def _causal_conv(seq, w, tail):
+    """Depthwise causal conv along time.  seq: (b, s, ...ch), w: (K, ...ch),
+    tail: (b, K-1, ...ch) history (zeros at sequence start)."""
+    s = seq.shape[1]
+    full = jnp.concatenate([tail.astype(seq.dtype), seq], axis=1)
+    out = sum(full[:, i : i + s] * w[i][None, None] for i in range(CONV_K))
+    return out, full[:, -( CONV_K - 1):]
+
+
+def _gated_norm(y, z, scale, eps=1e-6):
+    """RMSNorm over the (H, P) inner dims of y * silu(z)."""
+    g = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(g), axis=(-2, -1), keepdims=True)
+    return g * jax.lax.rsqrt(var + eps) * scale[None, None]
+
+
+def _segsum(dA):
+    """Stable 'segment sum' for the intra-chunk decay matrix L.
+
+    dA: (..., L) -> L_mat (..., L, L) with L[i, j] = exp(sum_{j<k<=i} dA_k),
+    lower-triangular (zero above diagonal).
+    """
+    l = dA.shape[-1]
+    csum = jnp.cumsum(dA, axis=-1)
+    diff = csum[..., :, None] - csum[..., None, :]
+    ii = jnp.arange(l)
+    mask = ii[:, None] >= ii[None, :]
+    # Mask BEFORE exp: upper-tri diffs are large-positive and would overflow;
+    # masking after exp leaves a 0*inf -> NaN in the backward pass.
+    diff = jnp.where(mask, diff, -jnp.inf)
+    return jnp.exp(diff)
+
+
+def ssd_chunked(x, dt, A, B, C, D, *, chunk: int = 256,
+                init_state: Optional[jax.Array] = None):
+    """Chunked SSD scan.
+
+    x: (b, s, h, p); dt: (b, s, h) (post-softplus); A: (h,) negative decay;
+    B, C: (b, s, n); D: (h,) skip.  Returns (y (b, s, h, p), final_state
+    (b, h, p, n)).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    xb = x.reshape(b, nc, chunk, h, p)
+    dtb = dt.reshape(b, nc, chunk, h)
+    Bb = B.reshape(b, nc, chunk, n)
+    Cb = C.reshape(b, nc, chunk, n)
+
+    dA = dtb * A[None, None, None, :]                      # (b,nc,l,h) <= 0
+    dA_cum = jnp.cumsum(dA, axis=2)                        # within chunk
+    dA_tot = dA_cum[:, :, -1:, :]                          # (b,nc,1,h)
+
+    # intra-chunk (dual quadratic form): y_intra = (L o (C B^T)) (dt*x)
+    L = _segsum(dA.transpose(0, 1, 3, 2))                  # (b,nc,h,l,l)
+    scores = jnp.einsum("bcln,bcmn->bclm", Cb, Bb)         # (b,nc,l,l)
+    gated = scores[:, :, None, :, :] * L                   # (b,nc,h,l,l)
+    xdt = xb * dtb[..., None]                              # (b,nc,l,h,p)
+    y_intra = jnp.einsum("bchlm,bcmhp->bclhp", gated, xdt)
+
+    # chunk-final states: sum_l exp(dA_tot - dA_cum_l) * B_l (dt*x)_l
+    decay_to_end = jnp.exp(dA_tot - dA_cum)                # (b,nc,l,h)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn", Bb, decay_to_end, xdt)
+
+    # inter-chunk recurrence over nc
+    chunk_decay = jnp.exp(dA_tot[:, :, 0, :])              # (b,nc,h)
+
+    def step(carry, xs):
+        h_prev = carry                                     # (b,h,p,n)
+        st, dec = xs                                       # (b,h,p,n), (b,h)
+        h_new = h_prev * dec[..., None, None] + st
+        return h_new, h_prev
+
+    h0 = init_state if init_state is not None else jnp.zeros((b, h, p, n), x.dtype)
+    # the state-passing scan is cost-negligible (elementwise adds, no
+    # collectives); cap probe unrolling so 32k-seq probes stay compilable
+    unroll = scan_unroll()
+    if unroll is True and nc > 32:
+        unroll = 1
+    final, h_prevs = jax.lax.scan(
+        step, h0, (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)),
+        unroll=unroll)
+    h_prevs = h_prevs.swapaxes(0, 1)                       # (b,nc,h,p,n) entering state
+
+    # contribution of the entering state to each position in the chunk
+    decay_from_start = jnp.exp(dA_cum)                     # (b,nc,l,h)
+    y_inter = jnp.einsum("bcln,bchpn,bclh->bclhp", Cb, h_prevs, decay_from_start)
+
+    y = (y_intra + y_inter).reshape(b, s, h, p) + x * D[None, None, :, None]
+    return y, final
+
+
+def mamba2_forward(params, hidden, *, d_model: int, expand: int = 2,
+                   head_p: int = 64, state: int = 128, chunk: int = 256,
+                   conv_state=None, ssm_state=None, return_state: bool = False):
+    """Full-sequence Mamba2 block (train / prefill).
+
+    conv_state: optional dict {"x": (b,K-1,h,p), "b": (b,K-1,n), "c": ...}.
+    """
+    b, s, _ = hidden.shape
+    d_inner = expand * d_model
+    n_heads = d_inner // head_p
+
+    z = jnp.einsum("bsd,dhp->bshp", hidden, params["w_z"].astype(hidden.dtype))
+    x = jnp.einsum("bsd,dhp->bshp", hidden, params["w_x"].astype(hidden.dtype))
+    # inner activations keep the full sequence locally (the SSD scan is
+    # sequential in time); under SP the residual re-gathers at block entry.
+    z = shard(z, "batch", None, None, "ssm_inner")
+    x = shard(x, "batch", None, None, "ssm_inner")
+    Bp = jnp.einsum("bsd,dn->bsn", hidden, params["w_b"].astype(hidden.dtype))
+    Cp = jnp.einsum("bsd,dn->bsn", hidden, params["w_c"].astype(hidden.dtype))
+    dt = jnp.einsum("bsd,dh->bsh", hidden, params["w_dt"].astype(hidden.dtype))
+
+    zeros_x = jnp.zeros((b, CONV_K - 1, n_heads, head_p), hidden.dtype)
+    zeros_n = jnp.zeros((b, CONV_K - 1, state), hidden.dtype)
+    cs = conv_state or {"x": zeros_x, "b": zeros_n, "c": zeros_n}
+    x_c, tail_x = _causal_conv(x, params["conv_x"].astype(x.dtype), cs["x"])
+    B_c, tail_b = _causal_conv(Bp, params["conv_b"].astype(x.dtype), cs["b"])
+    C_c, tail_c = _causal_conv(Cp, params["conv_c"].astype(x.dtype), cs["c"])
+    x_c = jax.nn.silu(x_c)
+    B_c = jax.nn.silu(B_c)
+    C_c = jax.nn.silu(C_c)
+
+    dt_s = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    y, final = ssd_chunked(
+        x_c.astype(jnp.float32), dt_s, A, B_c.astype(jnp.float32),
+        C_c.astype(jnp.float32), params["D"], chunk=min(chunk, s),
+        init_state=ssm_state)
+    y = _gated_norm(y, z, params["norm"]).astype(hidden.dtype)
+    out = jnp.einsum("bshp,hpd->bsd", y, params["w_out"].astype(hidden.dtype))
+    out = shard(out, "batch", "seq", "embed")
+    if return_state:
+        new_conv = {"x": tail_x, "b": tail_b, "c": tail_c}
+        return out, (new_conv, final)
+    return out
+
+
+def mamba2_decode(params, hidden, conv_state, ssm_state, *, d_model: int,
+                  expand: int = 2, head_p: int = 64, state: int = 128):
+    """Single-token recurrent step.
+
+    conv_state: {"x": (b,K-1,h,p), "b": (b,K-1,n), "c": (b,K-1,n)};
+    ssm_state : (b, h, p, n).  Returns (out, conv_state, ssm_state).
+    """
+    b, one, _ = hidden.shape
+    d_inner = expand * d_model
+    n_heads = d_inner // head_p
+
+    z = jnp.einsum("bsd,dhp->bshp", hidden, params["w_z"].astype(hidden.dtype))[:, 0]
+    x = jnp.einsum("bsd,dhp->bshp", hidden, params["w_x"].astype(hidden.dtype))[:, 0]
+    Bp = jnp.einsum("bsd,dn->bsn", hidden, params["w_b"].astype(hidden.dtype))[:, 0]
+    Cp = jnp.einsum("bsd,dn->bsn", hidden, params["w_c"].astype(hidden.dtype))[:, 0]
+    dt = jnp.einsum("bsd,dh->bsh", hidden, params["w_dt"].astype(hidden.dtype))[:, 0]
+
+    def conv_step(tail, new, w):
+        hist = jnp.concatenate([tail.astype(new.dtype), new[:, None]], axis=1)  # (b,K,...)
+        out = jnp.einsum("bk...,k...->b...", hist, w.astype(new.dtype))
+        return jax.nn.silu(out), hist[:, 1:]
+
+    x_c, tail_x = conv_step(conv_state["x"], x, params["conv_x"])
+    B_c, tail_b = conv_step(conv_state["b"], Bp, params["conv_b"])
+    C_c, tail_c = conv_step(conv_state["c"], Cp, params["conv_c"])
+
+    dt_s = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])   # (b,h)
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt_s * A[None, :])                                      # (b,h)
+    xdt = x_c.astype(jnp.float32) * dt_s[..., None]                      # (b,h,p)
+    new_state = ssm_state * dA[..., None, None] + jnp.einsum(
+        "bhp,bn->bhpn", xdt, B_c.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", new_state, C_c.astype(jnp.float32))
+    y = y + x_c.astype(jnp.float32) * params["D"][None, :, None]
+    y = _gated_norm(y[:, None], z[:, None], params["norm"])[:, 0]
+    y = y.astype(hidden.dtype)
+    out = jnp.einsum("bhp,hpd->bd", y, params["w_out"].astype(hidden.dtype))
+    new_conv = {"x": tail_x, "b": tail_b, "c": tail_c}
+    return out[:, None], new_conv, new_state

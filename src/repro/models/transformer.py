@@ -1,0 +1,634 @@
+"""Decoder-only transformer stacks (dense / MoE / VLM / SSM / hybrid).
+
+Layers are stacked and driven by ``lax.scan`` so HLO size is O(1) in depth
+(critical for 62-layer configs at dry-run compile time); per-layer
+heterogeneity (gemma2's local/global alternation) is threaded through the
+scan as a traced flag with the window limit selected by ``jnp.where`` — the
+parameter tree stays homogeneous.
+
+Every init function returns ``(params, axes)`` parallel trees (see
+models/common.py); caches follow the same convention via ``*_cache_spec``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.partitioning import shard
+from .attention import (
+    cross_attn_forward,
+    cross_kv,
+    gqa_decode,
+    gqa_forward,
+    gqa_init,
+    mla_decode,
+    mla_forward,
+    mla_init,
+)
+from .common import (
+    DTYPE,
+    embed,
+    embedding_init,
+    mlp_apply,
+    mlp_init,
+    rmsnorm,
+    rmsnorm_init,
+    scan_unroll,
+    softmax_cross_entropy,
+    stacked,
+    unembed,
+)
+from .moe import moe_apply, moe_init
+from .ssm import CONV_K, mamba2_decode, mamba2_forward, mamba2_init
+
+BIG_WINDOW = 1 << 30
+
+
+# --------------------------------------------------------------------------- #
+# per-layer init
+# --------------------------------------------------------------------------- #
+
+def _attn_layer_init(key, cfg: ModelConfig):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    params: Dict[str, Any] = {}
+    axes: Dict[str, Any] = {}
+    params["ln1"], axes["ln1"] = rmsnorm_init(cfg.d_model)
+    if cfg.mla:
+        params["attn"], axes["attn"] = mla_init(
+            k1, cfg.d_model, cfg.n_heads, q_lora=cfg.q_lora, kv_lora=cfg.kv_lora,
+            nope_dim=cfg.nope_dim, rope_dim=cfg.rope_dim, v_dim=cfg.v_dim)
+    else:
+        params["attn"], axes["attn"] = gqa_init(
+            k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd)
+    params["ln2"], axes["ln2"] = rmsnorm_init(cfg.d_model)
+    if cfg.n_experts:
+        params["moe"], axes["moe"] = moe_init(k2, cfg.d_model, cfg.d_ff, cfg.n_experts)
+    else:
+        params["mlp"], axes["mlp"] = mlp_init(k2, cfg.d_model, cfg.d_ff, gated=True)
+    if cfg.sandwich_norm:
+        params["ln1_post"], axes["ln1_post"] = rmsnorm_init(cfg.d_model)
+        params["ln2_post"], axes["ln2_post"] = rmsnorm_init(cfg.d_model)
+    return params, axes
+
+
+def _mamba_layer_init(key, cfg: ModelConfig):
+    params, axes = {}, {}
+    params["ln"], axes["ln"] = rmsnorm_init(cfg.d_model)
+    params["mamba"], axes["mamba"] = mamba2_init(
+        key, cfg.d_model, expand=cfg.ssm_expand, head_p=cfg.ssm_head_p,
+        state=cfg.ssm_state)
+    return params, axes
+
+
+# --------------------------------------------------------------------------- #
+# per-layer forward (train / prefill)
+# --------------------------------------------------------------------------- #
+
+def _attn_layer_fwd(p, cfg: ModelConfig, x, window_limit, *, positions=None,
+                    positions3=None, causal=True, chunk=1024, collect_kv=False):
+    h = rmsnorm(x, p["ln1"], cfg.rms_eps)
+    if cfg.mla:
+        attn_out, kv = mla_forward(
+            p["attn"], h, n_heads=cfg.n_heads, q_lora=cfg.q_lora,
+            kv_lora=cfg.kv_lora, nope_dim=cfg.nope_dim, rope_dim=cfg.rope_dim,
+            v_dim=cfg.v_dim, rope_theta=cfg.rope_theta, positions=positions,
+            chunk=chunk)
+    else:
+        attn_out, kv = gqa_forward(
+            p["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            head_dim=cfg.hd, rope_theta=cfg.rope_theta, positions=positions,
+            mrope_sections=cfg.mrope_sections, positions3=positions3,
+            causal=causal, window=window_limit, attn_softcap=cfg.attn_softcap,
+            query_scale=cfg.query_scale, chunk=chunk)
+    if cfg.sandwich_norm:
+        attn_out = rmsnorm(attn_out, p["ln1_post"], cfg.rms_eps)
+    x = x + attn_out
+
+    h = rmsnorm(x, p["ln2"], cfg.rms_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.n_experts:
+        ff, aux = moe_apply(p["moe"], h, n_experts=cfg.n_experts, top_k=cfg.top_k,
+                            capacity_factor=cfg.capacity_factor)
+    else:
+        ff = mlp_apply(p["mlp"], h, act=jax.nn.gelu if cfg.sandwich_norm else jax.nn.silu)
+    if cfg.sandwich_norm:
+        ff = rmsnorm(ff, p["ln2_post"], cfg.rms_eps)
+    x = x + ff
+    return (x, aux, kv) if collect_kv else (x, aux)
+
+
+def _window_limits(cfg: ModelConfig, n_layers: int) -> jnp.ndarray:
+    return jnp.array(
+        [cfg.window if cfg.layer_kind(i) == "local" else BIG_WINDOW
+         for i in range(n_layers)], jnp.int32)
+
+
+# --------------------------------------------------------------------------- #
+# decoder stacks
+# --------------------------------------------------------------------------- #
+
+def decoder_init(key, cfg: ModelConfig):
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    params, axes = {}, {}
+    params["embed"], axes["embed"] = embedding_init(keys[0], cfg.padded_vocab, cfg.d_model)
+    if cfg.family in ("ssm",):
+        params["layers"], axes["layers"] = stacked(keys[1:-1], _mamba_layer_init, cfg)
+    else:
+        params["layers"], axes["layers"] = stacked(keys[1:-1], _attn_layer_init, cfg)
+    params["final_norm"], axes["final_norm"] = rmsnorm_init(cfg.d_model)
+    if not cfg.tie_embeddings:
+        params["unembed"], axes["unembed"] = embedding_init(keys[-1], cfg.padded_vocab, cfg.d_model)
+    return params, axes
+
+
+def decoder_forward(params, cfg: ModelConfig, tokens=None, *, x_embed=None,
+                    positions=None, positions3=None, chunk=1024,
+                    logits_slice: Optional[str] = None):
+    """Full-sequence forward.  Either ``tokens`` or pre-embedded ``x_embed``.
+
+    logits_slice: None -> full logits; "last" -> last position only (prefill).
+    Returns (logits, aux_loss).
+    """
+    if x_embed is None:
+        x = embed(params["embed"], tokens, scale_by_dim=cfg.sandwich_norm)
+    else:
+        x = x_embed
+    x = shard(x, "batch", "seq", "embed")
+
+    if cfg.family == "ssm":
+        def body(carry, xs):
+            h, aux = carry
+            (p_l,) = xs
+            out = mamba2_forward(
+                p_l["mamba"], rmsnorm(h, p_l["ln"], cfg.rms_eps),
+                d_model=cfg.d_model, expand=cfg.ssm_expand,
+                head_p=cfg.ssm_head_p, state=cfg.ssm_state, chunk=cfg.ssd_chunk)
+            return (h + out, aux), None
+        (x, aux), _ = jax.lax.scan(
+            jax.checkpoint(body) if cfg.remat == "full" else body,
+            (x, jnp.zeros((), jnp.float32)), (params["layers"],),
+            unroll=scan_unroll())
+    else:
+        limits = _window_limits(cfg, cfg.n_layers)
+
+        def body(carry, xs):
+            h, aux = carry
+            p_l, limit = xs
+            h, aux_l = _attn_layer_fwd(
+                p_l, cfg, h, limit, positions=positions, positions3=positions3,
+                chunk=chunk)
+            return (h, aux + aux_l), None
+        (x, aux), _ = jax.lax.scan(
+            jax.checkpoint(body) if cfg.remat == "full" else body,
+            (x, jnp.zeros((), jnp.float32)), (params["layers"], limits),
+            unroll=scan_unroll())
+
+    x = rmsnorm(x, params["final_norm"], cfg.rms_eps)
+    if logits_slice == "hidden":
+        return x, aux
+    if logits_slice == "last":
+        x = x[:, -1:, :]
+    w_un = params["unembed"] if not cfg.tie_embeddings else params["embed"]
+    logits = unembed(w_un, x, cap=cfg.final_softcap)
+    return logits, aux
+
+
+# --------------------------------------------------------------------------- #
+# caches
+# --------------------------------------------------------------------------- #
+
+def cache_spec(cfg: ModelConfig, batch: int, cache_len: int):
+    """(shapes, logical axes) for the decode cache of this architecture.
+
+    SWA-everywhere architectures get a RING cache of ``min(window, cache_len)``
+    slots — this is what keeps long_500k decode bounded (DESIGN.md §5).
+    """
+    shapes: Dict[str, Tuple[tuple, Any, Any]] = {}
+    L = cfg.n_layers
+    def conv_entries(nl):
+        shapes["conv_x"] = ((nl, batch, CONV_K - 1, cfg.ssm_heads, cfg.ssm_head_p),
+                            ("layers", "batch", None, None, "ssm_inner"), DTYPE)
+        shapes["conv_b"] = ((nl, batch, CONV_K - 1, cfg.ssm_state),
+                            ("layers", "batch", None, None), DTYPE)
+        shapes["conv_c"] = ((nl, batch, CONV_K - 1, cfg.ssm_state),
+                            ("layers", "batch", None, None), DTYPE)
+
+    if cfg.family == "ssm":
+        conv_entries(L)
+        shapes["ssm"] = ((L, batch, cfg.ssm_heads, cfg.ssm_head_p, cfg.ssm_state),
+                         ("layers", "batch", None, "ssm_inner", None), jnp.float32)
+    elif cfg.family == "hybrid":
+        n_app = L // cfg.attn_every
+        conv_entries(L)
+        shapes["ssm"] = ((L, batch, cfg.ssm_heads, cfg.ssm_head_p, cfg.ssm_state),
+                         ("layers", "batch", None, "ssm_inner", None), jnp.float32)
+        shapes["k"] = ((n_app, batch, cache_len, cfg.n_kv_heads, cfg.hd),
+                       ("layers", "batch", "kv_len", "kv_heads", None), DTYPE)
+        shapes["v"] = ((n_app, batch, cache_len, cfg.n_kv_heads, cfg.hd),
+                       ("layers", "batch", "kv_len", "kv_heads", None), DTYPE)
+    elif cfg.mla:
+        shapes["ckv"] = ((L, batch, cache_len, cfg.kv_lora),
+                         ("layers", "batch", "kv_len", None), DTYPE)
+        shapes["kpe"] = ((L, batch, cache_len, cfg.rope_dim),
+                         ("layers", "batch", "kv_len", None), DTYPE)
+    elif cfg.paired_local_global:
+        # local layers: ring caches of `window` slots; global layers: full.
+        half = L // 2
+        w = min(cfg.window, cache_len)
+        shapes["k_loc"] = ((half, batch, w, cfg.n_kv_heads, cfg.hd),
+                           ("layers", "batch", "kv_len", "kv_heads", None), DTYPE)
+        shapes["v_loc"] = ((half, batch, w, cfg.n_kv_heads, cfg.hd),
+                           ("layers", "batch", "kv_len", "kv_heads", None), DTYPE)
+        shapes["k_glob"] = ((half, batch, cache_len, cfg.n_kv_heads, cfg.hd),
+                            ("layers", "batch", "kv_len", "kv_heads", None), DTYPE)
+        shapes["v_glob"] = ((half, batch, cache_len, cfg.n_kv_heads, cfg.hd),
+                            ("layers", "batch", "kv_len", "kv_heads", None), DTYPE)
+    else:
+        t = min(cfg.window, cache_len) if cfg.uses_swa_everywhere else cache_len
+        shapes["k"] = ((L, batch, t, cfg.n_kv_heads, cfg.hd),
+                       ("layers", "batch", "kv_len", "kv_heads", None), DTYPE)
+        shapes["v"] = ((L, batch, t, cfg.n_kv_heads, cfg.hd),
+                       ("layers", "batch", "kv_len", "kv_heads", None), DTYPE)
+    return shapes
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, abstract: bool = False):
+    spec = cache_spec(cfg, batch, cache_len)
+    if abstract:
+        return {k: jax.ShapeDtypeStruct(s, dt) for k, (s, _, dt) in spec.items()}
+    return {k: jnp.zeros(s, dt) for k, (s, _, dt) in spec.items()}
+
+
+def cache_axes(cfg: ModelConfig, batch: int, cache_len: int):
+    spec = cache_spec(cfg, batch, cache_len)
+    return {k: ax for k, (s, ax, dt) in spec.items()}
+
+
+def _finish_block(p_l, cfg: ModelConfig, h, attn_out):
+    """Residual + MLP half of a decoder block (decode path)."""
+    if cfg.sandwich_norm:
+        attn_out = rmsnorm(attn_out, p_l["ln1_post"], cfg.rms_eps)
+    h = h + attn_out
+    hn = rmsnorm(h, p_l["ln2"], cfg.rms_eps)
+    if cfg.n_experts:
+        ff, _ = moe_apply(p_l["moe"], hn, n_experts=cfg.n_experts,
+                          top_k=cfg.top_k, capacity_factor=cfg.capacity_factor)
+    else:
+        ff = mlp_apply(p_l["mlp"], hn,
+                       act=jax.nn.gelu if cfg.sandwich_norm else jax.nn.silu)
+    if cfg.sandwich_norm:
+        ff = rmsnorm(ff, p_l["ln2_post"], cfg.rms_eps)
+    return h + ff
+
+
+# --------------------------------------------------------------------------- #
+# prefill (build decode caches from a prompt)
+# --------------------------------------------------------------------------- #
+
+def _fill_ring(k_stack, cache_len: int, window: int):
+    """Place the last ``window`` positions of (L, B, S, ...) into ring slots."""
+    s = k_stack.shape[2]
+    w = min(window, cache_len)
+    if s <= w:
+        zeros = jnp.zeros(k_stack.shape[:2] + (w,) + k_stack.shape[3:], DTYPE)
+        return jax.lax.dynamic_update_slice_in_dim(zeros, k_stack.astype(DTYPE), 0, axis=2)
+    tail = k_stack[:, :, s - w:, ...]
+    slots = (jnp.arange(s - w, s)) % w
+    zeros = jnp.zeros(k_stack.shape[:2] + (w,) + k_stack.shape[3:], DTYPE)
+    return zeros.at[:, :, slots, ...].set(tail.astype(DTYPE))
+
+
+def _fill_flat(k_stack, cache_len: int):
+    zeros = jnp.zeros(k_stack.shape[:2] + (cache_len,) + k_stack.shape[3:], DTYPE)
+    return jax.lax.dynamic_update_slice_in_dim(zeros, k_stack.astype(DTYPE), 0, axis=2)
+
+
+def decoder_prefill(params, cfg: ModelConfig, tokens=None, *, x_embed=None,
+                    cache_len: int, positions=None, positions3=None, chunk=1024):
+    """Prompt pass: returns (last-token logits, decode cache)."""
+    if x_embed is None:
+        x = embed(params["embed"], tokens, scale_by_dim=cfg.sandwich_norm)
+    else:
+        x = x_embed
+    x = shard(x, "batch", "seq", "embed")
+
+    if cfg.family == "ssm":
+        def body(h, xs):
+            (p_l,) = xs
+            out, (conv_n, ssm_n) = mamba2_forward(
+                p_l["mamba"], rmsnorm(h, p_l["ln"], cfg.rms_eps),
+                d_model=cfg.d_model, expand=cfg.ssm_expand,
+                head_p=cfg.ssm_head_p, state=cfg.ssm_state, chunk=cfg.ssd_chunk,
+                return_state=True)
+            return h + out, (conv_n["x"].astype(DTYPE), conv_n["b"].astype(DTYPE),
+                             conv_n["c"].astype(DTYPE), ssm_n)
+        x, (cx, cb, cc, ssm_s) = jax.lax.scan(body, x, (params["layers"],),
+                                              unroll=scan_unroll())
+        cache = {"conv_x": cx, "conv_b": cb, "conv_c": cc,
+                 "ssm": ssm_s.astype(jnp.float32)}
+    else:
+        limits = _window_limits(cfg, cfg.n_layers)
+
+        def body(carry, xs):
+            h, aux = carry
+            p_l, limit = xs
+            h, aux_l, kv = _attn_layer_fwd(
+                p_l, cfg, h, limit, positions=positions, positions3=positions3,
+                chunk=chunk, collect_kv=True)
+            return (h, aux + aux_l), kv
+        (x, _), kvs = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), (params["layers"], limits),
+            unroll=scan_unroll())
+        if cfg.mla:
+            ckv, kpe = kvs
+            cache = {"ckv": _fill_flat(ckv, cache_len), "kpe": _fill_flat(kpe, cache_len)}
+        elif cfg.uses_swa_everywhere:
+            k_s, v_s = kvs
+            cache = {"k": _fill_ring(k_s, cache_len, cfg.window),
+                     "v": _fill_ring(v_s, cache_len, cfg.window)}
+        elif cfg.paired_local_global:
+            k_s, v_s = kvs
+            cache = {"k_loc": _fill_ring(k_s[0::2], cache_len, cfg.window),
+                     "v_loc": _fill_ring(v_s[0::2], cache_len, cfg.window),
+                     "k_glob": _fill_flat(k_s[1::2], cache_len),
+                     "v_glob": _fill_flat(v_s[1::2], cache_len)}
+        else:
+            k_s, v_s = kvs
+            cache = {"k": _fill_flat(k_s, cache_len), "v": _fill_flat(v_s, cache_len)}
+
+    x = rmsnorm(x[:, -1:, :], params["final_norm"], cfg.rms_eps)
+    w_un = params["unembed"] if not cfg.tie_embeddings else params["embed"]
+    logits = unembed(w_un, x, cap=cfg.final_softcap)
+    return logits, cache
+
+
+def hybrid_prefill(params, cfg: ModelConfig, tokens, cache_len: int, *, chunk=1024):
+    x = embed(params["embed"], tokens)
+    n_seg = _hybrid_segments(cfg)
+
+    def mamba_body(h, xs):
+        (p_l,) = xs
+        out, (conv_n, ssm_n) = mamba2_forward(
+            p_l["mamba"], rmsnorm(h, p_l["ln"], cfg.rms_eps),
+            d_model=cfg.d_model, expand=cfg.ssm_expand, head_p=cfg.ssm_head_p,
+            state=cfg.ssm_state, chunk=cfg.ssd_chunk, return_state=True)
+        return h + out, (conv_n["x"].astype(DTYPE), conv_n["b"].astype(DTYPE),
+                         conv_n["c"].astype(DTYPE), ssm_n.astype(jnp.float32))
+
+    cx_all, cb_all, cc_all, ssm_all, k_all, v_all = [], [], [], [], [], []
+    for seg in range(n_seg):
+        lo, hi = seg * cfg.attn_every, (seg + 1) * cfg.attn_every
+        x, (cx_n, cb_n, cc_n, ssm_n) = jax.lax.scan(
+            mamba_body, x, (_take_layers(params["layers"], lo, hi),),
+            unroll=scan_unroll())
+        cx_all.append(cx_n)
+        cb_all.append(cb_n)
+        cc_all.append(cc_n)
+        ssm_all.append(ssm_n)
+        sp = _take_one(params["shared"], seg % cfg.n_shared_attn)
+        x, _, kv = _attn_layer_fwd(sp, cfg, x, BIG_WINDOW, chunk=chunk, collect_kv=True)
+        k_all.append(kv[0][None])
+        v_all.append(kv[1][None])
+
+    cache = {
+        "conv_x": jnp.concatenate(cx_all, axis=0),
+        "conv_b": jnp.concatenate(cb_all, axis=0),
+        "conv_c": jnp.concatenate(cc_all, axis=0),
+        "ssm": jnp.concatenate(ssm_all, axis=0),
+        "k": _fill_flat(jnp.concatenate(k_all, axis=0), cache_len),
+        "v": _fill_flat(jnp.concatenate(v_all, axis=0), cache_len),
+    }
+    x = rmsnorm(x[:, -1:, :], params["final_norm"], cfg.rms_eps)
+    logits = unembed(params["embed"], x, cap=cfg.final_softcap)
+    return logits, cache
+
+
+# --------------------------------------------------------------------------- #
+# decode step (one token)
+# --------------------------------------------------------------------------- #
+
+def decoder_decode_step(params, cfg: ModelConfig, cache, tokens, step,
+                        rope_pos=None):
+    """One-token decode: returns (logits (B, 1, V), new_cache).
+
+    ``rope_pos`` overrides the RoPE angle position when it differs from the
+    cache slot position (VLM text positions exclude the patch block)."""
+    x = embed(params["embed"], tokens, scale_by_dim=cfg.sandwich_norm)
+
+    if cfg.family == "ssm":
+        def body(h, xs):
+            p_l, cx_l, cb_l, cc_l, ssm_l = xs
+            conv_l = {"x": cx_l, "b": cb_l, "c": cc_l}
+            out, conv_n, ssm_n = mamba2_decode(
+                p_l["mamba"], rmsnorm(h, p_l["ln"], cfg.rms_eps), conv_l, ssm_l,
+                d_model=cfg.d_model, expand=cfg.ssm_expand,
+                head_p=cfg.ssm_head_p, state=cfg.ssm_state)
+            return h + out, (conv_n["x"].astype(DTYPE), conv_n["b"].astype(DTYPE),
+                             conv_n["c"].astype(DTYPE), ssm_n)
+        x, (cx, cb, cc, ssm_new) = jax.lax.scan(
+            body, x, (params["layers"], cache["conv_x"], cache["conv_b"],
+                      cache["conv_c"], cache["ssm"]), unroll=scan_unroll())
+        new_cache = {"conv_x": cx, "conv_b": cb, "conv_c": cc, "ssm": ssm_new}
+    else:
+        limits = _window_limits(cfg, cfg.n_layers)
+        ring = cfg.uses_swa_everywhere
+
+        def body(h, xs):
+            p_l, limit, *cache_l = xs
+            hn = rmsnorm(h, p_l["ln1"], cfg.rms_eps)
+            if cfg.mla:
+                ckv_l, kpe_l = cache_l
+                attn_out, ckv_n, kpe_n = mla_decode(
+                    p_l["attn"], hn, ckv_l, kpe_l, step, n_heads=cfg.n_heads,
+                    nope_dim=cfg.nope_dim, rope_dim=cfg.rope_dim, v_dim=cfg.v_dim,
+                    rope_theta=cfg.rope_theta)
+                new_c = (ckv_n, kpe_n)
+            else:
+                k_l, v_l = cache_l
+                attn_out, k_n, v_n = gqa_decode(
+                    p_l["attn"], hn, k_l, v_l, step, n_heads=cfg.n_heads,
+                    n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+                    rope_theta=cfg.rope_theta, ring=ring,
+                    window_limit=limit, rope_pos=rope_pos,
+                    attn_softcap=cfg.attn_softcap, query_scale=cfg.query_scale)
+                new_c = (k_n, v_n)
+            if cfg.sandwich_norm:
+                attn_out = rmsnorm(attn_out, p_l["ln1_post"], cfg.rms_eps)
+            h = h + attn_out
+            hn = rmsnorm(h, p_l["ln2"], cfg.rms_eps)
+            if cfg.n_experts:
+                ff, _ = moe_apply(p_l["moe"], hn, n_experts=cfg.n_experts,
+                                  top_k=cfg.top_k,
+                                  capacity_factor=cfg.capacity_factor)
+            else:
+                ff = mlp_apply(p_l["mlp"], hn,
+                               act=jax.nn.gelu if cfg.sandwich_norm else jax.nn.silu)
+            if cfg.sandwich_norm:
+                ff = rmsnorm(ff, p_l["ln2_post"], cfg.rms_eps)
+            return h + ff, new_c
+
+        if cfg.mla:
+            x, (ckv_new, kpe_new) = jax.lax.scan(
+                body, x, (params["layers"], limits, cache["ckv"], cache["kpe"]),
+                unroll=scan_unroll())
+            new_cache = {"ckv": ckv_new, "kpe": kpe_new}
+        elif cfg.paired_local_global:
+            # scan over (local, global) layer PAIRS: the local layer's cache
+            # is a ring of `window` slots, the global layer's is full length.
+            half = cfg.n_layers // 2
+            pair_params = jax.tree.map(
+                lambda a: a.reshape(half, 2, *a.shape[1:]), params["layers"])
+
+            def pair_body(h, xs):
+                pp, kl, vl, kg, vg = xs
+                p_loc = jax.tree.map(lambda a: a[0], pp)
+                p_glob = jax.tree.map(lambda a: a[1], pp)
+                hn = rmsnorm(h, p_loc["ln1"], cfg.rms_eps)
+                a_out, kl_n, vl_n = gqa_decode(
+                    p_loc["attn"], hn, kl, vl, step, n_heads=cfg.n_heads,
+                    n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+                    rope_theta=cfg.rope_theta, ring=True, rope_pos=rope_pos,
+                    attn_softcap=cfg.attn_softcap, query_scale=cfg.query_scale)
+                h = _finish_block(p_loc, cfg, h, a_out)
+                hn = rmsnorm(h, p_glob["ln1"], cfg.rms_eps)
+                a_out, kg_n, vg_n = gqa_decode(
+                    p_glob["attn"], hn, kg, vg, step, n_heads=cfg.n_heads,
+                    n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+                    rope_theta=cfg.rope_theta, ring=False, rope_pos=rope_pos,
+                    attn_softcap=cfg.attn_softcap, query_scale=cfg.query_scale)
+                h = _finish_block(p_glob, cfg, h, a_out)
+                return h, (kl_n, vl_n, kg_n, vg_n)
+
+            x, (kl, vl, kg, vg) = jax.lax.scan(
+                pair_body, x,
+                (pair_params, cache["k_loc"], cache["v_loc"],
+                 cache["k_glob"], cache["v_glob"]), unroll=scan_unroll())
+            new_cache = {"k_loc": kl, "v_loc": vl, "k_glob": kg, "v_glob": vg}
+        else:
+            x, (k_new, v_new) = jax.lax.scan(
+                body, x, (params["layers"], limits, cache["k"], cache["v"]),
+                unroll=scan_unroll())
+            new_cache = {"k": k_new, "v": v_new}
+
+    x = rmsnorm(x, params["final_norm"], cfg.rms_eps)
+    w_un = params["unembed"] if not cfg.tie_embeddings else params["embed"]
+    logits = unembed(w_un, x, cap=cfg.final_softcap)
+    return logits, new_cache
+
+
+# --------------------------------------------------------------------------- #
+# hybrid (zamba2): mamba backbone + shared attention blocks
+# --------------------------------------------------------------------------- #
+
+def hybrid_init(key, cfg: ModelConfig):
+    keys = jax.random.split(key, cfg.n_layers + cfg.n_shared_attn + 2)
+    params, axes = {}, {}
+    params["embed"], axes["embed"] = embedding_init(keys[0], cfg.padded_vocab, cfg.d_model)
+    params["layers"], axes["layers"] = stacked(
+        list(keys[1:1 + cfg.n_layers]), _mamba_layer_init, cfg)
+    params["shared"], axes["shared"] = stacked(
+        list(keys[1 + cfg.n_layers:1 + cfg.n_layers + cfg.n_shared_attn]),
+        _attn_layer_init, cfg)
+    params["final_norm"], axes["final_norm"] = rmsnorm_init(cfg.d_model)
+    return params, axes
+
+
+def _hybrid_segments(cfg: ModelConfig):
+    n_seg = cfg.n_layers // cfg.attn_every
+    return n_seg
+
+
+def _take_layers(tree, lo, hi):
+    return jax.tree.map(lambda a: a[lo:hi], tree)
+
+
+def _take_one(tree, i):
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+def hybrid_forward(params, cfg: ModelConfig, tokens, *, chunk=1024,
+                   logits_slice: Optional[str] = None):
+    x = embed(params["embed"], tokens)
+    n_seg = _hybrid_segments(cfg)
+
+    def mamba_body(h, xs):
+        (p_l,) = xs
+        out = mamba2_forward(
+            p_l["mamba"], rmsnorm(h, p_l["ln"], cfg.rms_eps),
+            d_model=cfg.d_model, expand=cfg.ssm_expand, head_p=cfg.ssm_head_p,
+            state=cfg.ssm_state)
+        return h + out, None
+    mb = jax.checkpoint(mamba_body) if cfg.remat == "full" else mamba_body
+
+    for seg in range(n_seg):
+        seg_params = _take_layers(params["layers"],
+                                  seg * cfg.attn_every, (seg + 1) * cfg.attn_every)
+        x, _ = jax.lax.scan(mb, x, (seg_params,), unroll=scan_unroll())
+        sp = _take_one(params["shared"], seg % cfg.n_shared_attn)
+        x, _ = _attn_layer_fwd(sp, cfg, x, BIG_WINDOW, chunk=chunk)
+    x = rmsnorm(x, params["final_norm"], cfg.rms_eps)
+    if logits_slice == "hidden":
+        return x, jnp.zeros((), jnp.float32)
+    if logits_slice == "last":
+        x = x[:, -1:, :]
+    logits = unembed(params["embed"], x, cap=cfg.final_softcap)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def hybrid_decode_step(params, cfg: ModelConfig, cache, tokens, step):
+    x = embed(params["embed"], tokens)
+    n_seg = _hybrid_segments(cfg)
+
+    def mamba_body(h, xs):
+        p_l, cx_l, cb_l, cc_l, ssm_l = xs
+        conv_l = {"x": cx_l, "b": cb_l, "c": cc_l}
+        out, conv_n, ssm_n = mamba2_decode(
+            p_l["mamba"], rmsnorm(h, p_l["ln"], cfg.rms_eps), conv_l, ssm_l,
+            d_model=cfg.d_model, expand=cfg.ssm_expand, head_p=cfg.ssm_head_p,
+            state=cfg.ssm_state)
+        return h + out, (conv_n["x"].astype(DTYPE), conv_n["b"].astype(DTYPE),
+                         conv_n["c"].astype(DTYPE), ssm_n)
+
+    cx_out, cb_out, cc_out, ssm_out, k_out, v_out = [], [], [], [], [], []
+    for seg in range(n_seg):
+        lo, hi = seg * cfg.attn_every, (seg + 1) * cfg.attn_every
+        x, (cx_n, cb_n, cc_n, ssm_n) = jax.lax.scan(
+            mamba_body, x,
+            (_take_layers(params["layers"], lo, hi),
+             _take_layers(cache["conv_x"], lo, hi),
+             _take_layers(cache["conv_b"], lo, hi),
+             _take_layers(cache["conv_c"], lo, hi),
+             _take_layers(cache["ssm"], lo, hi)), unroll=scan_unroll())
+        cx_out.append(cx_n)
+        cb_out.append(cb_n)
+        cc_out.append(cc_n)
+        ssm_out.append(ssm_n)
+
+        sp = _take_one(params["shared"], seg % cfg.n_shared_attn)
+        hn = rmsnorm(x, sp["ln1"], cfg.rms_eps)
+        attn_out, k_n, v_n = gqa_decode(
+            sp["attn"], hn, cache["k"][seg], cache["v"][seg], step,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+            rope_theta=cfg.rope_theta, ring=False, window_limit=None)
+        x = x + attn_out
+        hn = rmsnorm(x, sp["ln2"], cfg.rms_eps)
+        x = x + mlp_apply(sp["mlp"], hn)
+        k_out.append(k_n)
+        v_out.append(v_n)
+
+    x = rmsnorm(x, params["final_norm"], cfg.rms_eps)
+    logits = unembed(params["embed"], x, cap=cfg.final_softcap)
+    new_cache = {
+        "conv_x": jnp.concatenate(cx_out, axis=0),
+        "conv_b": jnp.concatenate(cb_out, axis=0),
+        "conv_c": jnp.concatenate(cc_out, axis=0),
+        "ssm": jnp.concatenate(ssm_out, axis=0),
+        "k": jnp.stack(k_out),
+        "v": jnp.stack(v_out),
+    }
+    return logits, new_cache

@@ -1,0 +1,138 @@
+"""COAX-indexed request router for continuous-batching admission
+(DESIGN.md §2 — the paper's index in the serving plane).
+
+The pending-request pool is a multidimensional table
+(arrival_time, prompt_len, predicted_decode_len, priority); admission
+queries are range queries ("prompt_len in [lo, hi) and priority >= p and
+oldest first") used to form length-homogeneous decode batches (minimises
+padding waste).  prompt_len -> predicted_decode_len is a soft FD (decode
+budgets are set proportionally to prompt length in practice), so COAX
+indexes the pool with a reduced-dimensionality primary index.
+
+The router is rebuild-on-dirty: COAX's bucketed Bayesian fit makes rebuilds
+cheap (paper §5), and between rebuilds new arrivals sit in a small overflow
+list that is scanned linearly (bounded by ``rebuild_threshold``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core import COAXIndex, CoaxConfig, full_rect, rect_contains
+
+__all__ = ["Request", "CoaxRouter"]
+
+COLS = ("arrival", "prompt_len", "predicted_decode", "priority")
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    arrival: float
+    prompt: np.ndarray                 # token ids
+    max_new_tokens: int
+    priority: float = 0.0
+
+    @property
+    def prompt_len(self) -> int:
+        return int(len(self.prompt))
+
+
+def _predict_decode_len(prompt_len: int, max_new: int) -> float:
+    # serving-time heuristic: decode budget tracks prompt length (soft FD)
+    return float(min(max_new, 16 + 0.25 * prompt_len))
+
+
+class CoaxRouter:
+    def __init__(self, rebuild_threshold: int = 256,
+                 config: Optional[CoaxConfig] = None):
+        self.config = config or CoaxConfig()
+        self.rebuild_threshold = rebuild_threshold
+        self._pool: Dict[int, Request] = {}
+        self._index: Optional[COAXIndex] = None
+        self._index_rids: np.ndarray = np.empty(0, np.int64)
+        self._overflow: List[int] = []
+        self._tombstones = 0          # admitted rows still in the index
+        self._ids = itertools.count()
+
+    # ------------------------------------------------------------------ #
+    def submit(self, prompt: np.ndarray, max_new_tokens: int,
+               priority: float = 0.0, arrival: Optional[float] = None) -> int:
+        rid = next(self._ids)
+        req = Request(rid, arrival if arrival is not None else time.time(),
+                      np.asarray(prompt), max_new_tokens, priority)
+        self._pool[rid] = req
+        self._overflow.append(rid)
+        if len(self._overflow) >= self.rebuild_threshold:
+            self._rebuild()
+        return rid
+
+    def _row(self, req: Request) -> np.ndarray:
+        return np.array([req.arrival, req.prompt_len,
+                         _predict_decode_len(req.prompt_len, req.max_new_tokens),
+                         req.priority], np.float32)
+
+    def _rebuild(self) -> None:
+        if not self._pool:
+            self._index, self._index_rids = None, np.empty(0, np.int64)
+            self._overflow = []
+            return
+        rids = np.array(sorted(self._pool), np.int64)
+        rows = np.stack([self._row(self._pool[r]) for r in rids])
+        self._index = COAXIndex(rows, self.config) if len(rows) >= 64 else None
+        self._index_rids = rids
+        self._rows = rows
+        self._overflow = []
+        self._tombstones = 0
+
+    # ------------------------------------------------------------------ #
+    def admit(self, batch_size: int, *,
+              prompt_len_range: Tuple[float, float] = (0, np.inf),
+              min_priority: float = -np.inf,
+              max_predicted_decode: float = np.inf) -> List[Request]:
+        """Form a batch: range query over the pool, oldest-first."""
+        rect = full_rect(len(COLS))
+        rect[1] = prompt_len_range
+        rect[2, 1] = max_predicted_decode
+        rect[3, 0] = min_priority
+
+        hit_rids: List[int] = []
+        if self._index is not None:
+            rows_idx = self._index.query(rect)
+            hit_rids.extend(int(self._index_rids[i]) for i in rows_idx)
+        # overflow (not yet indexed) scanned linearly
+        for rid in self._overflow:
+            if rid in self._pool and bool(rect_contains(rect, self._row(self._pool[rid])[None])[0]):
+                hit_rids.append(rid)
+
+        cands = [self._pool[r] for r in dict.fromkeys(hit_rids) if r in self._pool]
+        cands.sort(key=lambda r: (-r.priority, r.arrival))
+        batch = cands[:batch_size]
+        for r in batch:
+            self._pool.pop(r.rid, None)
+        # admitted rows become tombstones (filtered by pool membership above);
+        # the index is rebuilt lazily once tombstones+overflow cross the
+        # threshold — COAX's cheap bucketed refit makes that a ~ms operation,
+        # per-admission rebuilds would dominate latency.
+        self._tombstones += len(batch)
+        if self._tombstones + len(self._overflow) >= self.rebuild_threshold:
+            self._rebuild()
+        return batch
+
+    def __len__(self) -> int:
+        return len(self._pool)
+
+    def stats(self) -> Dict:
+        return {
+            "pending": len(self._pool),
+            "indexed": int(self._index_rids.size),
+            "overflow": len(self._overflow),
+            "index_memory": self._index.memory_footprint() if self._index else 0,
+            "index_groups": [
+                (g.predictor, list(g.dependents)) for g in self._index.groups
+            ] if self._index else [],
+        }

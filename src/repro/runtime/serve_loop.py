@@ -1,0 +1,117 @@
+"""Batched serving loop: COAX-routed admission -> prefill -> decode waves.
+
+Wave-batched continuous serving: the router admits a length-homogeneous
+batch (range query on prompt_len — COAX's job), the wave prefills once and
+decodes until every sequence finishes or hits its budget, then the next
+wave is admitted.  Per-slot positions within a wave share the step counter;
+fully per-slot continuous batching (scatter cache writes) is an orthogonal
+extension noted in DESIGN.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.model import Model
+from .router import CoaxRouter, Request
+
+__all__ = ["ServeConfig", "Server", "ServeResult"]
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    batch_size: int = 8
+    max_prompt_len: int = 512
+    max_new_tokens: int = 64
+    cache_len: int = 1024
+    eos_token: int = 1
+    greedy: bool = True
+
+
+@dataclasses.dataclass
+class ServeResult:
+    rid: int
+    tokens: np.ndarray
+    prompt_len: int
+    wave: int
+    latency_s: float
+
+
+class Server:
+    def __init__(self, model: Model, params, cfg: ServeConfig,
+                 router: Optional[CoaxRouter] = None):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.router = router or CoaxRouter()
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, cfg.cache_len))
+        self._decode = jax.jit(model.decode_step)
+        self.waves = 0
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: Optional[int] = None,
+               priority: float = 0.0) -> int:
+        return self.router.submit(prompt, max_new_tokens or self.cfg.max_new_tokens,
+                                  priority)
+
+    # ------------------------------------------------------------------ #
+    def _pad_prompts(self, reqs: List[Request]) -> np.ndarray:
+        """Left-pad to a common length so position 'S-1' is the last prompt
+        token for every row (wave batches are length-homogeneous by routing,
+        so padding waste is small — that is the router's point)."""
+        s = max(r.prompt_len for r in reqs)
+        out = np.zeros((len(reqs), s), np.int32)
+        for i, r in enumerate(reqs):
+            out[i, s - r.prompt_len:] = r.prompt
+        return out
+
+    def run_wave(self) -> List[ServeResult]:
+        cfg = self.cfg
+        # admission: length-homogeneous band around the oldest pending request
+        reqs = self.router.admit(
+            cfg.batch_size, prompt_len_range=(0, cfg.max_prompt_len))
+        if not reqs:
+            return []
+        t0 = time.time()
+        prompts = self._pad_prompts(reqs)
+        b, s = prompts.shape
+
+        logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(prompts)})
+        max_new = max(r.max_new_tokens for r in reqs)
+        out_tokens = np.zeros((b, max_new), np.int32)
+        done = np.zeros(b, bool)
+
+        tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+        for t in range(max_new):
+            out_tokens[:, t] = np.where(done, cfg.eos_token, np.asarray(tok[:, 0]))
+            done |= np.asarray(tok[:, 0]) == cfg.eos_token
+            done |= np.array([t + 1 >= r.max_new_tokens for r in reqs])
+            if done.all():
+                break
+            logits, cache = self._decode(self.params, cache, tok,
+                                         jnp.int32(s + t))
+            tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+
+        dt = time.time() - t0
+        self.waves += 1
+        results = []
+        for i, r in enumerate(reqs):
+            n = min(r.max_new_tokens, max_new)
+            results.append(ServeResult(
+                rid=r.rid, tokens=out_tokens[i, :n], prompt_len=r.prompt_len,
+                wave=self.waves, latency_s=dt))
+        return results
+
+    def run_until_drained(self, max_waves: int = 100) -> List[ServeResult]:
+        out: List[ServeResult] = []
+        for _ in range(max_waves):
+            res = self.run_wave()
+            if not res and len(self.router) == 0:
+                break
+            out.extend(res)
+        return out

@@ -1,0 +1,84 @@
+"""Pure step functions handed to pjit: train / prefill / serve.
+
+These close over the Model and optimizer config only — params, optimizer
+state, batch and cache all flow through arguments so pjit shardings apply.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.model import Model
+from ..optim import AdamWConfig, adamw_update
+
+__all__ = ["make_train_step", "make_prefill_step", "make_serve_step", "make_eval_step"]
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig,
+                    lr_schedule: Optional[Callable] = None,
+                    grad_transform: Optional[Callable] = None,
+                    microbatches: int = 1):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``grad_transform`` optionally rewrites gradients before the optimizer —
+    the hook used by gradient compression (distributed/compression.py).
+
+    ``microbatches > 1`` enables gradient accumulation: the global batch is
+    split along dim 0 and scanned, so live activation memory scales with the
+    microbatch, not the global batch — the standard production lever for
+    fitting large global batches (and the prerequisite for pipeline
+    parallelism's microbatch streams).
+    """
+    from ..models.common import scan_unroll
+
+    def _loss_and_grads(params, batch):
+        return jax.value_and_grad(model.loss)(params, batch)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = _loss_and_grads(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda a: a.reshape(microbatches, a.shape[0] // microbatches,
+                                    *a.shape[1:]), batch)
+
+            def body(carry, mb):
+                acc_loss, acc_g = carry
+                l, g = _loss_and_grads(params, mb)
+                return (acc_loss + l,
+                        jax.tree.map(lambda a, b_: a + b_.astype(jnp.float32),
+                                     acc_g, g)), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), zeros), micro,
+                unroll=scan_unroll())
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        params, opt_state, metrics = adamw_update(params, grads, opt_state, opt_cfg,
+                                                  lr_schedule)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+    return train_step
+
+
+def make_eval_step(model: Model):
+    def eval_step(params, batch):
+        return model.loss(params, batch)
+    return eval_step
+
+
+def make_prefill_step(model: Model, cache_len: int):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, cache_len)
+    return prefill_step
+
+
+def make_serve_step(model: Model):
+    def serve_step(params, cache, tokens, step):
+        return model.decode_step(params, cache, tokens, step)
+    return serve_step

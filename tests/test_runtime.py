@@ -1,0 +1,179 @@
+"""Runtime substrate: checkpointing (atomic/async/elastic), fault tolerance
+(retry-from-checkpoint, SIGTERM, straggler detection), train loop, optimizer."""
+import os
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_batch, tiny_config
+from repro.configs import get_config
+from repro.models import build_model
+from repro.optim import AdamWConfig, adamw_init, adamw_update, global_norm
+from repro.runtime.checkpoint import Checkpointer, latest_step
+from repro.runtime.failure import (FailureInjector, GracefulShutdown,
+                                   StragglerDetector, retry)
+from repro.runtime.train_loop import TrainLoopConfig, train
+
+
+def _tiny_model():
+    cfg = tiny_config(get_config("h2o-danube-3-4b"))
+    return cfg, build_model(cfg)
+
+
+def _data_iter(cfg, seed=0):
+    i = 0
+    while True:
+        yield make_batch(cfg, batch=2, seq=16, seed=seed + i)
+        i += 1
+
+
+# --------------------------- optimizer ---------------------------------- #
+
+def test_adamw_minimises_quadratic():
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = adamw_init(params)
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state, m = adamw_update(params, grads, state, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+    assert int(state["step"]) == 200
+
+
+def test_grad_clip_bounds_update():
+    params = {"w": jnp.zeros(3)}
+    state = adamw_init(params)
+    cfg = AdamWConfig(lr=1.0, grad_clip=1.0, weight_decay=0.0)
+    _, _, metrics = adamw_update(params, {"w": jnp.full(3, 1e6)}, state, cfg)
+    assert float(metrics["grad_norm"]) > 1e5  # reported pre-clip
+
+
+# --------------------------- checkpointing ------------------------------- #
+
+def test_checkpoint_roundtrip(tmp_path):
+    ck = Checkpointer(tmp_path, keep=2)
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones(4, jnp.bfloat16)}}
+    ck.save(7, tree)
+    out = ck.restore(tree)
+    assert np.allclose(np.asarray(out["a"], np.float32), np.arange(6).reshape(2, 3))
+    assert out["b"]["c"].dtype == np.asarray(jax.device_get(tree["b"]["c"])).dtype
+    assert latest_step(tmp_path) == 7
+    assert ck.manifest()["step"] == 7
+
+
+def test_checkpoint_gc_and_latest(tmp_path):
+    ck = Checkpointer(tmp_path, keep=2)
+    tree = {"x": jnp.zeros(2)}
+    for s in (1, 2, 3, 4):
+        ck.save(s, tree)
+    steps = sorted(int(p.name.split("_")[1]) for p in tmp_path.iterdir()
+                   if p.name.startswith("step_"))
+    assert steps == [3, 4]
+
+
+def test_checkpoint_async(tmp_path):
+    ck = Checkpointer(tmp_path)
+    ck.save_async(5, {"x": jnp.arange(3)})
+    ck.wait()
+    assert latest_step(tmp_path) == 5
+
+
+def test_checkpoint_atomicity(tmp_path):
+    """A leftover temp dir must never be picked up as a checkpoint."""
+    ck = Checkpointer(tmp_path)
+    (tmp_path / ".tmp.step_00000009").mkdir()
+    ck.save(3, {"x": jnp.zeros(1)})
+    assert latest_step(tmp_path) == 3
+
+
+def test_checkpoint_elastic_restore_new_sharding(tmp_path):
+    """Restore with explicit shardings (elastic path: new mesh/device set)."""
+    ck = Checkpointer(tmp_path)
+    tree = {"w": jnp.arange(8, dtype=jnp.float32)}
+    ck.save(1, tree)
+    sharding = jax.sharding.SingleDeviceSharding(jax.devices()[0])
+    out = ck.restore(tree, shardings={"w": sharding})
+    assert out["w"].sharding == sharding
+    assert np.allclose(np.asarray(out["w"]), np.arange(8))
+
+
+# --------------------------- failure handling ---------------------------- #
+
+def test_retry_recovers():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("boom")
+        return "ok"
+
+    assert retry(flaky, retries=5, backoff=0.01) == "ok"
+    assert calls["n"] == 3
+
+
+def test_retry_exhausts():
+    with pytest.raises(RuntimeError):
+        retry(lambda: (_ for _ in ()).throw(RuntimeError("x")).__next__(),
+              retries=1, backoff=0.01)
+
+
+def test_straggler_detector_flags_slow_step():
+    det = StragglerDetector(warmup=5, z_thresh=3.0, trip_count=2)
+    for s in range(20):
+        det.record(s, 0.1 + 0.001 * (s % 3))
+    rep = det.record(20, 5.0)
+    assert rep is not None and rep.z > 3
+    det.record(21, 5.0)
+    assert det.hot
+
+
+def test_graceful_shutdown_flag():
+    with GracefulShutdown() as g:
+        assert not g.requested
+        g.request()
+        assert g.requested
+
+
+# --------------------------- train loop ---------------------------------- #
+
+def test_train_loop_loss_decreases(tmp_path):
+    cfg, model = _tiny_model()
+    out = train(model, _data_iter(cfg),
+                AdamWConfig(lr=3e-3),
+                TrainLoopConfig(steps=30, ckpt_dir=str(tmp_path), ckpt_every=10,
+                                log_every=1000, warmup=2),
+                log_fn=lambda s: None)
+    losses = [h["loss"] for h in out["history"]]
+    assert np.mean(losses[-5:]) < np.mean(losses[:5])
+    assert latest_step(tmp_path) is not None
+
+
+def test_train_loop_resume_continues(tmp_path):
+    cfg, model = _tiny_model()
+    kw = dict(opt_cfg=AdamWConfig(lr=1e-3))
+    train(model, _data_iter(cfg), kw["opt_cfg"],
+          TrainLoopConfig(steps=10, ckpt_dir=str(tmp_path), ckpt_every=5,
+                          log_every=1000), log_fn=lambda s: None)
+    out = train(model, _data_iter(cfg), kw["opt_cfg"],
+                TrainLoopConfig(steps=15, ckpt_dir=str(tmp_path), ckpt_every=5,
+                                log_every=1000), log_fn=lambda s: None)
+    # resumed from 10, ran to 15
+    assert out["history"][0]["step"] >= 10
+    assert out["final_step"] == 15
+
+
+def test_train_loop_failure_injection_recovers(tmp_path):
+    cfg, model = _tiny_model()
+    inj = FailureInjector(fail_at_steps=(7,))
+    out = train(model, _data_iter(cfg), AdamWConfig(lr=1e-3),
+                TrainLoopConfig(steps=12, ckpt_dir=str(tmp_path), ckpt_every=5,
+                                log_every=1000),
+                failure_injector=inj, log_fn=lambda s: None)
+    assert out["restarts"] == 1
+    assert out["final_step"] == 12

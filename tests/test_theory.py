@@ -1,0 +1,61 @@
+"""§7 theory: closed forms vs Monte-Carlo simulation (Thm 7.1-7.4, Eq. 5)."""
+import numpy as np
+import pytest
+
+from repro.core import theory
+
+
+def test_effectiveness_eq5():
+    assert theory.effectiveness(10.0, 0.0) == 1.0
+    assert abs(theory.effectiveness(10.0, 1.0) - 10.0 / 12.0) < 1e-12
+    # monotone: tighter margin -> higher effectiveness
+    effs = [theory.effectiveness(5.0, e) for e in (0.1, 0.5, 1.0, 5.0)]
+    assert all(a > b for a, b in zip(effs, effs[1:]))
+
+
+def test_areas_eq3_eq4_consistent():
+    q_y, eps, a = 7.0, 1.5, 2.0
+    sr = theory.result_area(q_y, eps, a)
+    ss = theory.scanned_area(q_y, eps, a)
+    assert abs(sr / ss - theory.effectiveness(q_y, eps)) < 1e-12
+    assert ss >= sr
+
+
+@pytest.mark.parametrize("eps,sigma", [(20.0, 1.0), (8.0, 0.5)])
+def test_met_theorem_7_1(eps, sigma):
+    """Thm 7.1 holds in the sigma << eps Brownian limit; a discrete walk
+    exits with overshoot ~0.58*sigma (ladder height), biasing the simulated
+    MET to ~(eps + 0.58*sigma)^2 — so test at large eps/sigma with a band
+    wide enough for that bias."""
+    mean, var = theory.simulate_met(eps, sigma, trials=800, seed=2)
+    expect = theory.met_expectation(eps, sigma)
+    assert abs(mean - expect) / expect < 0.12
+
+
+def test_met_variance_theorem_7_3():
+    eps, sigma = 20.0, 1.0
+    _, var = theory.simulate_met(eps, sigma, trials=3_000, seed=3)
+    expect = theory.met_variance(eps, sigma)
+    assert abs(var - expect) / expect < 0.3  # MC + overshoot bias band
+
+
+def test_optimal_slope_theorem_7_2():
+    """MET is maximised at slope == mean gap (zero drift)."""
+    eps, sigma, mu = 8.0, 1.0, 2.0
+    at_mu = theory.met_drifted_expectation(eps, sigma, 0.0)
+    off = [theory.met_drifted_expectation(eps, sigma, d) for d in (-0.5, -0.1, 0.1, 0.5)]
+    assert all(at_mu >= o for o in off)
+    # simulated drifted walk is also worse
+    m_drift, _ = theory.simulate_met(eps, sigma, mu=mu, slope=mu + 0.2,
+                                     trials=500, seed=4)
+    m_opt, _ = theory.simulate_met(eps, sigma, mu=mu, slope=mu, trials=500, seed=4)
+    assert m_opt > m_drift
+
+
+def test_segment_count_theorem_7_4():
+    rng = np.random.default_rng(5)
+    n, sigma, eps = 150_000, 1.0, 10.0
+    gaps = rng.normal(4.0, sigma, n)
+    segs = theory.greedy_segment_count(gaps, eps)
+    expect = theory.expected_segments(n, eps, sigma)
+    assert abs(segs - expect) / expect < 0.35  # renewal asymptotics, loose band
