@@ -4,14 +4,24 @@ column files / full scan, on airline-like and OSM-like data.
 Per the paper's methodology (§8.2.1: 'We use the configuration that performs
 best for each index'), every engine's resolution knob is tuned on a held-out
 query subset before measurement.
+
+``--batch`` switches to the throughput mode (DESIGN.md §2): QPS of the
+batched engine (``COAXIndex.query_batch`` through ``BatchQueryExecutor``)
+vs the per-query loop across batch sizes, emitted to ``BENCH_queries.json``.
 """
 from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
 
 import numpy as np
 
 from .common import PCFG, dataset, emit, queries, time_queries
 from repro.core import (COAXIndex, CoaxConfig, ColumnFiles, FullScan, STRTree,
                         UniformGrid, point_rect)
+from repro.engine import BatchQueryExecutor
 
 SWEEPS = {
     "coax": [8, 16, 32, 64],
@@ -76,5 +86,59 @@ def run(rows: int = None, n_queries: int = None) -> dict:
     return out
 
 
+def run_batch(rows: int = 100_000, n_queries: int = 256,
+              batch_sizes=(1, 8, 16, 64, 256),
+              out_path: str = None) -> dict:
+    """Throughput mode: QPS vs wave width, batched engine vs per-query loop.
+
+    Both paths answer the same rects on the same index; per-wave results are
+    checked for set equality against the loop before timing is reported.
+    """
+    ds = dataset("airline", rows)
+    rects = np.asarray(queries("airline", rows, n_queries, PCFG.knn_k))
+    idx = COAXIndex(ds.data)
+
+    # per-query loop baseline (the seed's only path)
+    t0 = time.perf_counter()
+    loop_hits = [idx.query(r) for r in rects]
+    single_s = time.perf_counter() - t0
+    single_qps = len(rects) / single_s
+    emit("batch/airline/per_query_loop_qps", single_qps,
+         f"rows={rows},queries={len(rects)}")
+
+    result = {
+        "dataset": "airline", "rows": rows, "n_queries": len(rects),
+        "single_qps": single_qps, "batch_qps": {}, "speedup": {},
+    }
+    for bs in batch_sizes:
+        ex = BatchQueryExecutor(idx, max_batch=bs)
+        got = ex.execute(rects)          # warm + correctness pass
+        assert all(np.array_equal(g, w) for g, w in zip(got, loop_hits)), bs
+        ex.reset_stats()
+        t0 = time.perf_counter()
+        ex.execute(rects)
+        dt = time.perf_counter() - t0
+        qps = len(rects) / dt
+        result["batch_qps"][bs] = qps
+        result["speedup"][bs] = qps / single_qps
+        emit(f"batch/airline/qps@{bs}", qps,
+             f"speedup={qps / single_qps:.2f}x")
+
+    out = Path(out_path) if out_path else \
+        Path(__file__).resolve().parents[1] / "BENCH_queries.json"
+    out.write_text(json.dumps(result, indent=2) + "\n")
+    print(f"BENCH {json.dumps(result)}")
+    return result
+
+
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--batch", action="store_true",
+                    help="throughput mode: QPS vs batch size + BENCH_queries.json")
+    ap.add_argument("--rows", type=int, default=None)
+    ap.add_argument("--queries", type=int, default=None)
+    args = ap.parse_args()
+    if args.batch:
+        run_batch(rows=args.rows or 100_000, n_queries=args.queries or 256)
+    else:
+        run(rows=args.rows, n_queries=args.queries)

@@ -17,6 +17,7 @@ from .types import (
     full_rect,
     point_rect,
     rect_contains,
+    split_hits,
 )
 from .softfd import (
     BayesianLinearModel,
@@ -27,7 +28,8 @@ from .softfd import (
     learn_soft_fds,
     merge_groups,
 )
-from .translate import reduced_dims, translate_dependent_interval, translate_rect
+from .translate import (reduced_dims, translate_dependent_interval,
+                        translate_rect, translate_rects)
 from .gridfile import GridFile, fit_cells_per_dim, gather_ranges
 from .baselines import ColumnFiles, FullScan, STRTree, UniformGrid
 from .coax import COAXIndex, CoaxConfig
@@ -45,12 +47,14 @@ __all__ = [
     "full_rect",
     "point_rect",
     "rect_contains",
+    "split_hits",
     "bucket_centres",
     "bayes_linear_regress",
     "detect_soft_fds",
     "merge_groups",
     "learn_soft_fds",
     "translate_rect",
+    "translate_rects",
     "translate_dependent_interval",
     "reduced_dims",
     "GridFile",

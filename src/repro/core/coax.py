@@ -19,14 +19,14 @@ Query path (``COAXIndex.query``):
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .gridfile import GridFile, fit_cells_per_dim
 from .softfd import SoftFDConfig, learn_soft_fds
-from .translate import reduced_dims, translate_rect
-from .types import FDGroup, Rect, full_rect, rect_contains
+from .translate import reduced_dims, translate_rect, translate_rects
+from .types import FDGroup, Rect, full_rect, rect_contains, split_hits
 
 __all__ = ["CoaxConfig", "COAXIndex"]
 
@@ -122,13 +122,59 @@ class COAXIndex:
         rect = np.asarray(rect, dtype=np.float64)
         nav = self.translate(rect)
         hits = [self.primary.query(nav, rect)]
+        # half-open rects: [lo, hi) intersects [blo, bhi] iff lo <= bhi, hi > blo
         if self._outlier_lo is not None and bool(
-            np.all((rect[:, 0] < self._outlier_hi) & (rect[:, 1] > self._outlier_lo))
+            np.all((rect[:, 0] <= self._outlier_hi) & (rect[:, 1] > self._outlier_lo))
         ):
             o_nav = rect.copy()
             hits.append(self.outlier.query(o_nav, rect))
         out = np.concatenate(hits) if len(hits) > 1 else hits[0]
         return np.sort(out)
+
+    # ------------------------------------------------------------------ #
+    def translate_batch(self, rects: np.ndarray) -> np.ndarray:
+        """Batched Eq. 2: (B, D, 2) full rects -> (B, K, 2) nav-rects."""
+        return translate_rects(rects, self.groups, self.keep_dims)
+
+    def query_batch(self, rects: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Answer B range queries in one vectorised pass.
+
+        rects : (B, D, 2).  Returns ``(query_ids, row_ids)`` sorted by
+        (query_id, row_id); per query the row-id set is exactly what
+        ``query`` returns.  One translation pass, one primary directory
+        probe and one outlier probe are shared by the whole batch; the
+        §8.2.3 outlier skip is a vectorised bbox test that sub-batches the
+        outlier probe to only the queries that can touch it.
+        """
+        rects = np.asarray(rects, dtype=np.float64)
+        b = rects.shape[0]
+        if b == 0:
+            return np.empty(0, np.int64), np.empty(0, np.int64)
+        nav = self.translate_batch(rects)
+        q_p, r_p = self.primary.query_batch(nav, rects)
+
+        if self._outlier_lo is not None:
+            # same half-open/closed-bbox intersection test as ``query``
+            touch = np.all(
+                (rects[:, :, 0] <= self._outlier_hi) & (rects[:, :, 1] > self._outlier_lo),
+                axis=1,
+            )
+            if touch.any():
+                sub = rects[touch]
+                q_o, r_o = self.outlier.query_batch(sub, sub)
+                if r_o.size:
+                    q_o = np.nonzero(touch)[0][q_o]    # sub-batch ids -> batch ids
+                    q_p = np.concatenate([q_p, q_o])
+                    r_p = np.concatenate([r_p, r_o])
+                    order = np.lexsort((r_p, q_p))     # merge the two hit lists
+                    q_p, r_p = q_p[order], r_p[order]
+        return q_p, r_p
+
+    def query_batch_split(self, rects: np.ndarray) -> List[np.ndarray]:
+        """``query_batch`` reshaped to one sorted row-id array per rect."""
+        rects = np.asarray(rects, dtype=np.float64)
+        qids, rids = self.query_batch(rects)
+        return split_hits(qids, rids, rects.shape[0])
 
     # ------------------------------------------------------------------ #
     def memory_footprint(self) -> int:

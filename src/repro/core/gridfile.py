@@ -26,7 +26,7 @@ __all__ = ["GridFile", "gather_ranges", "fit_cells_per_dim", "batched_searchsort
 
 
 def batched_searchsorted(vals: np.ndarray, blk_lo: np.ndarray,
-                         blk_hi: np.ndarray, target: float,
+                         blk_hi: np.ndarray, target,
                          side: str = "left") -> np.ndarray:
     """Vectorised per-segment ``searchsorted``.
 
@@ -35,6 +35,11 @@ def batched_searchsorted(vals: np.ndarray, blk_lo: np.ndarray,
     simultaneously across every candidate cell (log2(max block) vectorised
     iterations instead of a Python loop per cell; the C implementation's
     per-cell bisect equivalent, DESIGN.md §3).
+
+    ``target`` may be a scalar (one query) or an array aligned with
+    ``blk_lo`` (per-segment targets — the batched engine searches every
+    (query, cell) pair in one pass).  ``-inf``/``+inf`` targets degenerate
+    to ``blk_lo``/``blk_hi`` respectively, i.e. "no constraint".
     """
     lo = blk_lo.astype(np.int64).copy()
     hi = blk_hi.astype(np.int64).copy()
@@ -50,6 +55,22 @@ def batched_searchsorted(vals: np.ndarray, blk_lo: np.ndarray,
             go_right = active & (mv <= target)
         lo = np.where(go_right, mid + 1, lo)
         hi = np.where(active & ~go_right, mid, hi)
+
+
+def f32_ceil(x: np.ndarray) -> np.ndarray:
+    """Smallest float32 >= x, elementwise (float64 in, float32 out).
+
+    Lets the batched row filter compare float32 records against float64 rect
+    bounds entirely in float32: for any float32 ``v`` and float64 bound ``c``,
+    ``v >= c  <=>  v >= f32_ceil(c)`` and ``v < c  <=>  v < f32_ceil(c)``,
+    because no float32 lies strictly between a float64 and its float32
+    round-up.  Infinities pass through.
+    """
+    x = np.asarray(x, dtype=np.float64)
+    with np.errstate(over="ignore"):
+        y = x.astype(np.float32)
+    rounded_down = y.astype(np.float64) < x
+    return np.where(rounded_down, np.nextafter(y, np.float32(np.inf)), y)
 
 
 def gather_ranges(los: np.ndarray, his: np.ndarray) -> np.ndarray:
@@ -245,3 +266,113 @@ class GridFile:
         stats.rows_matched = int(out.size)
         self.last_query_stats = stats
         return np.sort(out)
+
+    # ------------------------------------------------------------------ #
+    # Batched execution path (DESIGN.md §2): B queries share one directory
+    # probe and one fused scan instead of B python round-trips.
+    # ------------------------------------------------------------------ #
+    def plan_batch(self, nav_rects: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Vectorised directory probe for a batch of nav-rects.
+
+        nav_rects : (B, len(index_dims), 2) translated constraints, in
+            index_dims order (the batched analogue of ``query``'s nav_rect).
+
+        Returns ``(query_ids, cells)`` — a flat list of candidate (query,
+        cell) pairs covering, for every query, exactly the cells
+        ``_candidate_cells`` would visit.  Cells are enumerated per query in
+        the same row-major order as the scalar path.
+        """
+        nav_rects = np.asarray(nav_rects, dtype=np.float64)
+        b = nav_rects.shape[0]
+        k = len(self.grid_dims)
+        c = self.cells_per_dim
+        if b == 0:
+            return np.empty(0, np.int64), np.empty(0, np.int64)
+        if k == 0:
+            # single cell 0 per query
+            return np.arange(b, dtype=np.int64), np.zeros(b, np.int64)
+
+        first = np.zeros((b, k), dtype=np.int64)
+        last = np.full((b, k), c - 1, dtype=np.int64)
+        for i, (edges, d) in enumerate(zip(self.inner_edges, self.grid_dims)):
+            pos = self.index_dims.index(d)
+            lo = nav_rects[:, pos, 0]
+            hi = nav_rects[:, pos, 1]
+            # searchsorted(±inf) lands on the open outermost cells, matching
+            # the scalar path's finite-only probing.
+            first[:, i] = np.searchsorted(edges, lo, side="right")
+            last[:, i] = np.searchsorted(edges, hi, side="left")
+
+        counts = last - first + 1                       # (B, k) cells per dim
+        n_cells = np.where((counts > 0).all(axis=1), counts.prod(axis=1), 0)
+        total = int(n_cells.sum())
+        if total == 0:
+            return np.empty(0, np.int64), np.empty(0, np.int64)
+
+        qids = np.repeat(np.arange(b, dtype=np.int64), n_cells)
+        starts = np.concatenate([[0], np.cumsum(n_cells)[:-1]])
+        local = np.arange(total, dtype=np.int64) - np.repeat(starts, n_cells)
+
+        # Mixed-radix decode of the per-query local cell index into per-dim
+        # coordinates (last grid dim least significant, like the scalar path).
+        safe = np.maximum(counts, 1)
+        strides = np.ones((b, k), dtype=np.int64)
+        for i in range(k - 2, -1, -1):
+            strides[:, i] = strides[:, i + 1] * safe[:, i + 1]
+        flat = np.zeros(total, dtype=np.int64)
+        for i in range(k):
+            digit = (local // strides[qids, i]) % safe[qids, i]
+            flat = flat * c + (first[qids, i] + digit)
+        return qids, flat
+
+    def query_batch(
+        self, nav_rects: np.ndarray, filter_rects: np.ndarray
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Answer B range queries in one vectorised pass.
+
+        nav_rects    : (B, len(index_dims), 2) translated constraints.
+        filter_rects : (B, D, 2) the ORIGINAL full predicates, applied to
+            every scanned row of the owning query.
+
+        Returns ``(query_ids, row_ids)`` — the flat hit list, sorted by
+        (query_id, row_id); per query it equals ``query(nav, filter)``.
+        """
+        nav_rects = np.asarray(nav_rects, dtype=np.float64)
+        filter_rects = np.asarray(filter_rects, dtype=np.float64)
+        qids, cells = self.plan_batch(nav_rects)
+        if cells.size == 0:
+            return np.empty(0, np.int64), np.empty(0, np.int64)
+
+        blk_lo = self.offsets[cells]
+        blk_hi = self.offsets[cells + 1]
+        if self.sort_dim is not None and self.n_rows:
+            pos = self.index_dims.index(self.sort_dim)
+            q_lo = nav_rects[qids, pos, 0]              # per-(query,cell) targets
+            q_hi = nav_rects[qids, pos, 1]
+            sv = self.sort_vals
+            blk_lo = batched_searchsorted(sv, blk_lo, blk_hi, q_lo, "left")
+            blk_hi = batched_searchsorted(sv, blk_lo, blk_hi, q_hi, "left")
+
+        lens = np.maximum(blk_hi - blk_lo, 0)
+        idx = gather_ranges(blk_lo, blk_hi)
+        if idx.size == 0:
+            return np.empty(0, np.int64), np.empty(0, np.int64)
+        row_q = np.repeat(qids, lens)                   # owning query per row
+        rows = self.rows[idx]                           # (T, D) one f32 gather
+
+        # Row filter in float32 with ceil-rounded bounds (exact: see
+        # ``f32_ceil``), one dim at a time so temporaries stay (T,)-sized —
+        # float64 (T, D) broadcasts are the batch path's cache killer.
+        lo32 = f32_ceil(filter_rects[:, :, 0])          # (B, D)
+        hi32 = f32_ceil(filter_rects[:, :, 1])
+        hit = np.ones(idx.size, dtype=bool)
+        for j in range(self.d_full):
+            if np.isneginf(lo32[:, j]).all() and np.isposinf(hi32[:, j]).all():
+                continue                                # dim unconstrained
+            v = rows[:, j]
+            np.logical_and(hit, v >= lo32[row_q, j], out=hit)
+            np.logical_and(hit, v < hi32[row_q, j], out=hit)
+        out_q = row_q[hit]
+        out_r = self.row_ids[idx[hit]]
+        order = np.lexsort((out_r, out_q))
+        return out_q[order], out_r[order]

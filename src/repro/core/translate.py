@@ -27,6 +27,7 @@ from .types import FDGroup, LinearModel, Rect
 __all__ = [
     "translate_dependent_interval",
     "translate_rect",
+    "translate_rects",
     "reduced_dims",
 ]
 
@@ -84,6 +85,48 @@ def translate_rect(rect: Rect, groups: Sequence[FDGroup], keep_dims: Sequence[in
         reduced[k, 0] = out_lo[d]
         reduced[k, 1] = max(out_hi[d], out_lo[d])  # keep lo<=hi (empty range ok)
     return reduced
+
+
+def translate_rects(
+    rects: np.ndarray, groups: Sequence[FDGroup], keep_dims: Sequence[int]
+) -> np.ndarray:
+    """Batched Eq. 2: project B full rects onto the indexed dims at once.
+
+    ``rects`` is (B, D, 2); returns (B, len(keep_dims), 2) nav-rects in
+    ``keep_dims`` order — exactly ``translate_rect`` applied per row, but one
+    vectorised pass over the batch (the batched engine's translation stage).
+
+    An unconstrained dependent translates to ``(-inf, +inf)``, so the
+    intersection is a no-op for it and no per-query masking is needed.
+    """
+    rects = np.asarray(rects, dtype=np.float64)
+    if rects.ndim != 3 or rects.shape[-1] != 2:
+        raise ValueError(f"rects must be (B, D, 2), got {rects.shape}")
+    lo = rects[:, :, 0]                               # (B, D)
+    hi = rects[:, :, 1]
+
+    keep = list(keep_dims)
+    pos = {d: k for k, d in enumerate(keep)}
+    out_lo = lo[:, keep].copy()                       # (B, K) direct constraints
+    out_hi = hi[:, keep].copy()
+
+    for g in groups:
+        if g.predictor not in pos:                    # predictor not indexed
+            continue
+        k = pos[g.predictor]
+        for d in g.dependents:
+            mdl = g.models[d]
+            lo_numer = lo[:, d] - mdl.b - mdl.eps_ub  # (B,)
+            hi_numer = hi[:, d] - mdl.b + mdl.eps_lb
+            if mdl.m > 0:
+                t_lo, t_hi = lo_numer / mdl.m, hi_numer / mdl.m
+            else:
+                t_lo, t_hi = hi_numer / mdl.m, lo_numer / mdl.m
+            out_lo[:, k] = np.maximum(out_lo[:, k], t_lo)
+            out_hi[:, k] = np.minimum(out_hi[:, k], t_hi)
+
+    out_hi = np.maximum(out_hi, out_lo)               # keep lo<=hi (empty ok)
+    return np.stack([out_lo, out_hi], axis=-1)
 
 
 def reduced_dims(n_dims: int, groups: Sequence[FDGroup]) -> List[int]:

@@ -28,6 +28,7 @@ __all__ = [
     "full_rect",
     "point_rect",
     "rect_contains",
+    "split_hits",
     "validate_rect",
 ]
 
@@ -111,6 +112,16 @@ def rect_contains(rect: Rect, data: np.ndarray) -> np.ndarray:
     """Boolean mask of rows of ``data`` inside ``rect`` (half-open per dim)."""
     lo, hi = rect[:, 0], rect[:, 1]
     return np.all((data >= lo) & (data < hi), axis=-1)
+
+
+def split_hits(qids: np.ndarray, row_ids: np.ndarray,
+               n_queries: int) -> List[np.ndarray]:
+    """Flat (query_id, row_id) hit list -> one row-id array per query.
+
+    ``qids`` must be sorted ascending (the ``query_batch`` contract).
+    """
+    bounds = np.searchsorted(qids, np.arange(n_queries + 1))
+    return [row_ids[bounds[i]:bounds[i + 1]] for i in range(n_queries)]
 
 
 def validate_rect(rect: Rect, n_dims: int) -> Rect:

@@ -1,0 +1,21 @@
+"""Batched query execution engine (DESIGN.md §2).
+
+The per-call path (``COAXIndex.query``) answers one rect per Python
+round-trip; this package turns B queries into one translation pass, one
+directory probe and one fused scan, and wraps that in an admission/drain
+server modelled on ``runtime.router``'s continuous-batching loop — the same
+pattern, applied to range-query traffic instead of decode requests.
+
+``BatchQueryExecutor`` — wave-sliced ``query_batch`` driver with per-wave stats
+``QueryServer``        — submit rects, drain in priority/FIFO waves
+"""
+from .executor import BatchQueryExecutor, WaveStats, split_hits
+from .server import PendingQuery, QueryServer
+
+__all__ = [
+    "BatchQueryExecutor",
+    "WaveStats",
+    "split_hits",
+    "QueryServer",
+    "PendingQuery",
+]

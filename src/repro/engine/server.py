@@ -1,0 +1,99 @@
+"""Range-query admission server (DESIGN.md §2).
+
+Adapts ``runtime.router.CoaxRouter``'s continuous-batching admission pattern
+to range-query traffic: clients ``submit`` rects into a pending pool, the
+server ``drain``s the pool in priority-then-FIFO waves of ``max_batch``
+queries, and each wave is one fused ``BatchQueryExecutor`` call.  Per-wave
+stats mirror the router's so the serving plane exposes one vocabulary
+(waves, pending, qps) whether it batches decode requests or index probes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from .executor import BatchQueryExecutor
+
+__all__ = ["PendingQuery", "QueryServer"]
+
+
+@dataclasses.dataclass
+class PendingQuery:
+    qid: int
+    rect: np.ndarray              # (D, 2)
+    priority: float
+    arrival: float
+
+
+class QueryServer:
+    """Submit range queries, drain them in batched waves.
+
+    Parameters
+    ----------
+    index : engine handed to ``BatchQueryExecutor`` (COAXIndex or baseline).
+    max_batch : queries fused per wave.
+    """
+
+    def __init__(self, index, max_batch: int = 64,
+                 executor: Optional[BatchQueryExecutor] = None):
+        self.executor = executor or BatchQueryExecutor(index, max_batch=max_batch)
+        self._pending: Dict[int, PendingQuery] = {}
+        self._ids = itertools.count()
+        self.waves_drained = 0
+
+    # ------------------------------------------------------------------ #
+    def submit(self, rect: np.ndarray, priority: float = 0.0,
+               arrival: Optional[float] = None) -> int:
+        """Queue one rect; returns its query id."""
+        rect = np.asarray(rect, dtype=np.float64)
+        if rect.ndim != 2 or rect.shape[1] != 2:
+            raise ValueError(f"rect must be (D, 2), got {rect.shape}")
+        n_dims = getattr(self.executor.index, "n_dims", None)
+        if n_dims is not None and rect.shape[0] != n_dims:
+            raise ValueError(f"rect has {rect.shape[0]} dims, index has {n_dims}")
+        qid = next(self._ids)
+        self._pending[qid] = PendingQuery(
+            qid, rect, priority,
+            arrival if arrival is not None else time.time())
+        return qid
+
+    def submit_many(self, rects: np.ndarray, priority: float = 0.0) -> List[int]:
+        return [self.submit(r, priority=priority) for r in rects]
+
+    # ------------------------------------------------------------------ #
+    def drain(self, max_waves: Optional[int] = None) -> Dict[int, np.ndarray]:
+        """Run pending queries to completion (or for ``max_waves`` waves).
+
+        Returns {query_id: sorted row ids} for every query answered.  Wave
+        formation is priority-then-FIFO, like the router's admission sort.
+        """
+        results: Dict[int, np.ndarray] = {}
+        width = self.executor.max_batch
+        waves_this_call = 0
+        while self._pending:
+            if max_waves is not None and waves_this_call >= max_waves:
+                break
+            cands = sorted(self._pending.values(),
+                           key=lambda q: (-q.priority, q.arrival, q.qid))
+            wave = cands[:width]
+            rects = np.stack([q.rect for q in wave])
+            answers = self.executor.execute(rects)
+            for q, ans in zip(wave, answers):
+                results[q.qid] = ans
+                del self._pending[q.qid]
+            self.waves_drained += 1
+            waves_this_call += 1
+        return results
+
+    # ------------------------------------------------------------------ #
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    def stats(self) -> dict:
+        s = self.executor.stats()
+        s.update(pending=len(self._pending), waves_drained=self.waves_drained)
+        return s

@@ -5,7 +5,9 @@ exposes padded jit'd wrappers; ``ref`` holds the pure-jnp oracles the tests
 compare against.  All kernels are validated in interpret mode on CPU; the
 BlockSpecs target TPU v5e VMEM/VPU/MXU geometry (DESIGN.md §3).
 """
-from .ops import bucket_histogram, range_scan_query, split_by_margin
+from .ops import (bucket_histogram, range_scan_batch_query, range_scan_query,
+                  split_by_margin)
 from . import ref
 
-__all__ = ["range_scan_query", "bucket_histogram", "split_by_margin", "ref"]
+__all__ = ["range_scan_query", "range_scan_batch_query", "bucket_histogram",
+           "split_by_margin", "ref"]

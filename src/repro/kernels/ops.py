@@ -19,9 +19,11 @@ from . import ref
 from .grid_histogram import grid_histogram
 from .margin_split import margin_split
 from .range_scan import range_scan
+from .range_scan_batch import range_scan_batch
 
 __all__ = [
     "range_scan_query",
+    "range_scan_batch_query",
     "bucket_histogram",
     "split_by_margin",
 ]
@@ -67,6 +69,42 @@ def range_scan_query(
             window, tile=tile,
         )
     return counts.sum(), mask[:n]
+
+
+def range_scan_batch_query(
+    rows_t,                # (D, N) column-major records
+    rect_lo,               # (B, D) per-query lower bounds
+    rect_hi,               # (B, D) per-query upper bounds
+    windows=None,          # (B, 2) per-query [lo, hi) scan windows; None -> whole
+    *,
+    tile: int = 512,
+    use_pallas: bool = True,
+    interpret: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Counts + masks for a BATCH of translated queries in one device launch.
+
+    Returns ``(counts (B,), mask (B, N))`` where each mask row covers the
+    ORIGINAL n records.  The kernel wants bounds as (D, B) columns so one
+    query's rect is a lane-resident block; this wrapper transposes.
+    """
+    rows_t = jnp.asarray(rows_t, jnp.float32)
+    rect_lo = jnp.asarray(rect_lo, jnp.float32)
+    rect_hi = jnp.asarray(rect_hi, jnp.float32)
+    d, n = rows_t.shape
+    b = rect_lo.shape[0]
+    if windows is None:
+        windows = jnp.broadcast_to(jnp.array([0, n], jnp.int32), (b, 2))
+    windows = jnp.asarray(windows, jnp.int32)
+    padded = _pad_to(rows_t, tile, jnp.inf)  # +inf rows never match (< hi fails)
+    if use_pallas:
+        mask, counts = range_scan_batch(
+            padded, rect_lo.T, rect_hi.T, windows, tile=tile, interpret=interpret,
+        )
+    else:
+        mask, counts = ref.range_scan_batch_ref(
+            padded, rect_lo.T, rect_hi.T, windows, tile=tile,
+        )
+    return counts.sum(axis=1), mask[:, :n]
 
 
 def bucket_histogram(

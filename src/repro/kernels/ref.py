@@ -9,7 +9,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["range_scan_ref", "grid_histogram_ref", "margin_split_ref"]
+__all__ = ["range_scan_ref", "range_scan_batch_ref", "grid_histogram_ref",
+           "margin_split_ref"]
 
 
 def range_scan_ref(rows_t, rect_lo, rect_hi, window, *, tile: int = 512):
@@ -22,6 +23,23 @@ def range_scan_ref(rows_t, rect_lo, rect_hi, window, *, tile: int = 512):
     in_window = (gid >= window[0]) & (gid < window[1])
     mask = (inside & in_window).astype(jnp.int32)
     counts = mask.reshape(n // tile, tile).sum(axis=1)
+    return mask, counts
+
+
+def range_scan_batch_ref(rows_t, rect_lo_t, rect_hi_t, windows, *, tile: int = 512):
+    """Oracle for ``range_scan_batch``: (mask (B, N), counts (B, num_tiles)).
+
+    rect_lo_t/rect_hi_t are (D, B) bounds columns, windows is (B, 2) — the
+    exact kernel contract including padding.
+    """
+    d, n = rows_t.shape
+    lo = rect_lo_t.T[:, :, None]                               # (B, D, 1)
+    hi = rect_hi_t.T[:, :, None]
+    inside = jnp.all((rows_t[None] >= lo) & (rows_t[None] < hi), axis=1)  # (B, N)
+    gid = jnp.arange(n, dtype=jnp.int32)[None, :]
+    in_window = (gid >= windows[:, :1]) & (gid < windows[:, 1:])
+    mask = (inside & in_window).astype(jnp.int32)
+    counts = mask.reshape(mask.shape[0], n // tile, tile).sum(axis=2)
     return mask, counts
 
 

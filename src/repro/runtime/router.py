@@ -104,10 +104,11 @@ class CoaxRouter:
         if self._index is not None:
             rows_idx = self._index.query(rect)
             hit_rids.extend(int(self._index_rids[i]) for i in rows_idx)
-        # overflow (not yet indexed) scanned linearly
-        for rid in self._overflow:
-            if rid in self._pool and bool(rect_contains(rect, self._row(self._pool[rid])[None])[0]):
-                hit_rids.append(rid)
+        # overflow (not yet indexed) checked in one vectorised pass
+        ov = [r for r in self._overflow if r in self._pool]
+        if ov:
+            ov_rows = np.stack([self._row(self._pool[r]) for r in ov])
+            hit_rids.extend(r for r, ok in zip(ov, rect_contains(rect, ov_rows)) if ok)
 
         cands = [self._pool[r] for r in dict.fromkeys(hit_rids) if r in self._pool]
         cands.sort(key=lambda r: (-r.priority, r.arrival))

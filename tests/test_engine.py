@@ -1,0 +1,166 @@
+"""Batched execution engine: batch/single equivalence across layers.
+
+The contract under test (DESIGN.md §2): for every workload, every rect, the
+batched path returns EXACTLY the per-rect result — ``translate_rects`` row i
+== ``translate_rect(rects[i])``, ``GridFile.query_batch`` per query ==
+``GridFile.query``, ``COAXIndex.query_batch`` per query == ``COAXIndex.query``
+(including the §8.2.3 per-query outlier skip), and the batched Pallas kernel
+== the single-query kernel == the jnp oracle.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (COAXIndex, FullScan, GridFile, full_rect, point_rect,
+                        translate_rect, translate_rects)
+from repro.data import knn_rect_queries, make_airline, make_generic_fd, make_osm
+from repro.engine import BatchQueryExecutor, QueryServer, split_hits
+
+
+def _workloads():
+    # >=3 synthetic workloads; generic_fd with outlier_frac=0 exercises the
+    # no-outlier index (empty outlier grid + bbox skip disabled).
+    return [
+        ("airline", make_airline(20_000, seed=3)),
+        ("osm", make_osm(20_000, seed=3)),
+        ("generic_fd", make_generic_fd(15_000, 5, ((0, 1), (2, 3)), seed=7)),
+        ("generic_no_outliers",
+         make_generic_fd(15_000, 4, ((0, 1),), outlier_frac=0.0, seed=11)),
+    ]
+
+
+def _rects_for(data, n=24, seed=0):
+    d = data.shape[1]
+    rects = list(knn_rect_queries(data, n, 64, seed=seed, sample_cap=10_000))
+    rects.append(full_rect(d))                            # full-range rect
+    rects.append(np.stack([np.full(d, 1e12), np.full(d, 1e12 + 1)], axis=-1))
+    rects.append(point_rect(data[0]))                     # empty-result rect
+    lop = np.full(d, -np.inf); lop[0] = float(np.median(data[:, 0]))
+    rects.append(np.stack([lop, np.full(d, np.inf)], axis=-1))  # half-open
+    return np.stack(rects)
+
+
+@pytest.mark.parametrize("name,ds", _workloads(), ids=lambda w: w if isinstance(w, str) else "")
+def test_coax_query_batch_equals_per_rect_query(name, ds):
+    idx = COAXIndex(ds.data)
+    rects = _rects_for(ds.data)
+    qids, rids = idx.query_batch(rects)
+    # flat hit list is (query, row) sorted
+    assert np.all(np.diff(qids) >= 0)
+    per_query = split_hits(qids, rids, rects.shape[0])
+    fs = FullScan(ds.data)
+    saw_empty = saw_full = False
+    for i, r in enumerate(rects):
+        want = idx.query(r)
+        assert np.array_equal(per_query[i], want), (name, i)
+        assert np.array_equal(want, fs.query(r)), (name, i)  # ground truth
+        saw_empty |= want.size == 0
+        saw_full |= want.size == ds.data.shape[0]
+    assert saw_empty and saw_full
+
+
+def test_outlier_bbox_boundary_query_not_skipped():
+    """A rect whose lower bound equals the outlier bbox max must still probe
+    the outlier index (half-open [lo, hi) vs closed bbox: lo <= bhi)."""
+    ds = make_generic_fd(15_000, 5, ((0, 1), (2, 3)), seed=7)
+    idx = COAXIndex(ds.data)
+    assert idx._outlier_lo is not None
+    d = int(np.argmax(idx._outlier_hi - idx._outlier_lo))
+    # a row attaining the outlier bbox max on dim d
+    cand = np.where(ds.data[:, d].astype(np.float64) == float(idx._outlier_hi[d]))[0]
+    assert cand.size
+    rect = point_rect(ds.data[cand[0]])
+    fs = FullScan(ds.data)
+    want = fs.query(rect)
+    assert np.array_equal(idx.query(rect), want)
+    assert np.array_equal(idx.query_batch_split(rect[None])[0], want)
+
+
+def test_translate_rects_matches_scalar():
+    ds = make_airline(10_000, seed=5)
+    idx = COAXIndex(ds.data)
+    rects = _rects_for(ds.data, n=16, seed=2)
+    batch = translate_rects(rects, idx.groups, idx.keep_dims)
+    for i, r in enumerate(rects):
+        single = translate_rect(r, idx.groups, idx.keep_dims)
+        assert np.array_equal(batch[i], single), i
+
+
+@pytest.mark.parametrize("sort_dim", [None, 0, 2])
+def test_gridfile_query_batch_equals_query(sort_dim):
+    rng = np.random.default_rng(4)
+    data = rng.normal(0, 10, (6_000, 3)).astype(np.float32)
+    gf = GridFile(data, index_dims=[0, 1, 2], cells_per_dim=5, sort_dim=sort_dim)
+    rects = np.sort(rng.uniform(-20, 20, (40, 3, 2)), axis=-1)
+    rects[0] = full_rect(3)
+    qids, rids = gf.query_batch(rects, rects)
+    for i, r in enumerate(rects):
+        assert np.array_equal(rids[qids == i], gf.query(r, r)), (sort_dim, i)
+
+
+def test_gridfile_empty_batch_and_empty_grid():
+    data = np.empty((0, 2), np.float32)
+    gf = GridFile(data, index_dims=[0, 1], cells_per_dim=3)
+    qids, rids = gf.query_batch(np.zeros((0, 2, 2)), np.zeros((0, 2, 2)))
+    assert qids.size == 0 and rids.size == 0
+    qids, rids = gf.query_batch(full_rect(2)[None], full_rect(2)[None])
+    assert qids.size == 0 and rids.size == 0
+
+
+def test_batch_kernel_matches_single_and_oracle():
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+    from repro.kernels import range_scan_batch_query, range_scan_query, ref
+    from repro.kernels.range_scan_batch import range_scan_batch
+
+    rng = np.random.default_rng(0)
+    d, n, b = 4, 700, 5
+    rows = rng.normal(0, 5, (d, n)).astype(np.float32)
+    lo = rng.uniform(-6, 0, (b, d)).astype(np.float32)
+    hi = lo + rng.uniform(0, 8, (b, d)).astype(np.float32)
+    wins = np.stack([rng.integers(0, n // 2, b),
+                     rng.integers(n // 2, n, b)], 1).astype(np.int32)
+
+    counts_b, mask_b = range_scan_batch_query(rows, lo, hi, wins, interpret=True)
+    counts_r, mask_r = range_scan_batch_query(rows, lo, hi, wins, use_pallas=False)
+    assert np.array_equal(np.asarray(mask_b), np.asarray(mask_r))
+    assert np.array_equal(np.asarray(counts_b), np.asarray(counts_r))
+    for i in range(b):
+        c1, m1 = range_scan_query(rows, lo[i], hi[i], wins[i])
+        assert int(c1) == int(counts_b[i])
+        assert np.array_equal(np.asarray(m1), np.asarray(mask_b[i])), i
+
+
+def test_executor_waves_and_fallback():
+    ds = make_osm(8_000, seed=1)
+    idx = COAXIndex(ds.data)
+    rects = _rects_for(ds.data, n=10, seed=3)
+    ex = BatchQueryExecutor(idx, max_batch=4)
+    got = ex.execute(rects)
+    # baseline engine without query_batch goes through the per-rect loop
+    ex_fb = BatchQueryExecutor(FullScan(ds.data), max_batch=4)
+    want = ex_fb.execute(rects)
+    assert len(got) == len(want) == rects.shape[0]
+    for g, w in zip(got, want):
+        assert np.array_equal(g, w)
+    s = ex.stats()
+    assert s["batched"] and not ex_fb.stats()["batched"]
+    assert s["waves"] == -(-rects.shape[0] // 4) and s["queries"] == rects.shape[0]
+
+
+def test_query_server_drains_priority_waves():
+    ds = make_airline(8_000, seed=2)
+    idx = COAXIndex(ds.data)
+    rects = _rects_for(ds.data, n=9, seed=4)
+    srv = QueryServer(idx, max_batch=5)
+    qids = [srv.submit(r, priority=float(i % 3), arrival=float(i))
+            for i, r in enumerate(rects)]
+    assert len(srv) == rects.shape[0]
+    first = srv.drain(max_waves=1)
+    assert len(first) == 5                     # one wave, highest priority first
+    assert all(qids[i] in first for i in (2, 5, 8))  # priority-2 submissions
+    rest = srv.drain()
+    assert len(srv) == 0
+    results = {**first, **rest}
+    for qid, r in zip(qids, rects):
+        assert np.array_equal(results[qid], idx.query(r)), qid
+    assert srv.stats()["queries"] == rects.shape[0]
