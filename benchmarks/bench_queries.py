@@ -8,6 +8,11 @@ query subset before measurement.
 ``--batch`` switches to the throughput mode (DESIGN.md §2): QPS of the
 batched engine (``COAXIndex.query_batch`` through ``BatchQueryExecutor``)
 vs the per-query loop across batch sizes, emitted to ``BENCH_queries.json``.
+``--backend {numpy,device,both}`` additionally sweeps the device-resident
+serving plane (DESIGN.md §4) over the same waves — the ``device_qps``
+section — asserting both backends return identical hits before timing.
+``--smoke`` shrinks the sweep and turns the throughput/agreement checks
+into hard assertions for CI.
 """
 from __future__ import annotations
 
@@ -88,12 +93,18 @@ def run(rows: int = None, n_queries: int = None) -> dict:
 
 def run_batch(rows: int = 100_000, n_queries: int = 256,
               batch_sizes=(1, 8, 16, 64, 256),
-              out_path: str = None) -> dict:
+              out_path: str = None, backend: str = "both",
+              smoke: bool = False) -> dict:
     """Throughput mode: QPS vs wave width, batched engine vs per-query loop.
 
     Both paths answer the same rects on the same index; per-wave results are
     checked for set equality against the loop before timing is reported.
+    ``backend`` sweeps the numpy path, the device-resident plan (DESIGN.md
+    §4), or both; ``smoke`` additionally asserts batch QPS beats the
+    per-query loop and that all backends agree on hit counts (the CI gate).
     """
+    if smoke:
+        batch_sizes = tuple(bs for bs in batch_sizes if bs <= 64) or (1, 64)
     ds = dataset("airline", rows)
     rects = np.asarray(queries("airline", rows, n_queries, PCFG.knn_k))
     idx = COAXIndex(ds.data)
@@ -110,19 +121,53 @@ def run_batch(rows: int = 100_000, n_queries: int = 256,
         "dataset": "airline", "rows": rows, "n_queries": len(rects),
         "single_qps": single_qps, "batch_qps": {}, "speedup": {},
     }
-    for bs in batch_sizes:
-        ex = BatchQueryExecutor(idx, max_batch=bs)
-        got = ex.execute(rects)          # warm + correctness pass
-        assert all(np.array_equal(g, w) for g, w in zip(got, loop_hits)), bs
-        ex.reset_stats()
-        t0 = time.perf_counter()
-        ex.execute(rects)
-        dt = time.perf_counter() - t0
-        qps = len(rects) / dt
-        result["batch_qps"][bs] = qps
-        result["speedup"][bs] = qps / single_qps
-        emit(f"batch/airline/qps@{bs}", qps,
-             f"speedup={qps / single_qps:.2f}x")
+    backends = ("numpy", "device") if backend == "both" else (backend,)
+    hit_counts = {}
+    for bk in backends:
+        if bk == "device":
+            from repro.engine import device_available
+            if not device_available():
+                emit("batch/airline/device", 0.0, "skipped: jax unavailable")
+                continue
+            result["device_qps"] = {}
+            result["device_speedup"] = {}
+        qps_key = "batch_qps" if bk == "numpy" else "device_qps"
+        spd_key = "speedup" if bk == "numpy" else "device_speedup"
+        for bs in batch_sizes:
+            ex = BatchQueryExecutor(idx, max_batch=bs, backend=bk)
+            got = ex.execute(rects)      # warm + compile + correctness pass
+            assert all(np.array_equal(g, w)
+                       for g, w in zip(got, loop_hits)), (bk, bs)
+            ex.reset_stats()
+            t0 = time.perf_counter()
+            ex.execute(rects)
+            dt = time.perf_counter() - t0
+            qps = len(rects) / dt
+            result[qps_key][bs] = qps
+            result[spd_key][bs] = qps / single_qps
+            s = ex.stats()
+            hit_counts[(bk, bs)] = s["hits"]
+            emit(f"batch/airline/{bk}_qps@{bs}", qps,
+                 f"speedup={qps / single_qps:.2f}x,"
+                 f"rows_scanned={s['rows_scanned']},"
+                 f"cells_probed={s['cells_probed']},"
+                 f"fallbacks={s['device_fallbacks']}")
+    idx.backend = "numpy"
+
+    if smoke:
+        # the throughput gate is numpy-batch vs per-query loop; a device-only
+        # sweep on CPU legitimately trails the loop (the device plane targets
+        # real accelerators), so only gate when the numpy sweep ran
+        if result["batch_qps"]:
+            best_batch = max(result["batch_qps"].values())
+            assert best_batch >= single_qps, (
+                f"batch path regressed: {best_batch:.0f} qps < per-query "
+                f"loop {single_qps:.0f} qps")
+        assert hit_counts, "smoke ran no backend sweep (jax unavailable?)"
+        counts = set(hit_counts.values())
+        assert len(counts) == 1, f"backends disagree on hit counts: {hit_counts}"
+        emit("batch/airline/smoke", 1.0,
+             f"batch>=single ok, hit counts agree ({counts.pop()})")
 
     out = Path(out_path) if out_path else \
         Path(__file__).resolve().parents[1] / "BENCH_queries.json"
@@ -135,10 +180,16 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--batch", action="store_true",
                     help="throughput mode: QPS vs batch size + BENCH_queries.json")
+    ap.add_argument("--backend", choices=("numpy", "device", "both"),
+                    default="both", help="which query_batch backend(s) to sweep")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sweep + hard throughput/agreement asserts (CI)")
     ap.add_argument("--rows", type=int, default=None)
     ap.add_argument("--queries", type=int, default=None)
     args = ap.parse_args()
     if args.batch:
-        run_batch(rows=args.rows or 100_000, n_queries=args.queries or 256)
+        run_batch(rows=args.rows or 100_000,
+                  n_queries=args.queries or (64 if args.smoke else 256),
+                  backend=args.backend, smoke=args.smoke)
     else:
         run(rows=args.rows, n_queries=args.queries)

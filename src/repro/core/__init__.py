@@ -30,7 +30,8 @@ from .softfd import (
 )
 from .translate import (reduced_dims, translate_dependent_interval,
                         translate_rect, translate_rects)
-from .gridfile import GridFile, fit_cells_per_dim, gather_ranges
+from .gridfile import (BatchStats, GridFile, batched_searchsorted,
+                       fit_cells_per_dim, gather_ranges)
 from .baselines import ColumnFiles, FullScan, STRTree, UniformGrid
 from .coax import COAXIndex, CoaxConfig
 from . import theory
@@ -58,7 +59,9 @@ __all__ = [
     "translate_dependent_interval",
     "reduced_dims",
     "GridFile",
+    "BatchStats",
     "gather_ranges",
+    "batched_searchsorted",
     "fit_cells_per_dim",
     "FullScan",
     "UniformGrid",

@@ -23,7 +23,7 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .gridfile import GridFile, fit_cells_per_dim
+from .gridfile import BatchStats, GridFile, fit_cells_per_dim
 from .softfd import SoftFDConfig, learn_soft_fds
 from .translate import reduced_dims, translate_rect, translate_rects
 from .types import FDGroup, Rect, full_rect, rect_contains, split_hits
@@ -46,9 +46,16 @@ class COAXIndex:
     name = "coax"
 
     def __init__(self, data: np.ndarray, config: CoaxConfig = CoaxConfig(),
-                 groups: Optional[Sequence[FDGroup]] = None):
+                 groups: Optional[Sequence[FDGroup]] = None,
+                 backend: str = "numpy",
+                 device_opts: Optional[dict] = None):
         """Build the index.  ``groups`` may be supplied to skip detection
-        (e.g. when the DBA already knows the FDs, or from a previous fit)."""
+        (e.g. when the DBA already knows the FDs, or from a previous fit).
+
+        ``backend="device"`` routes ``query_batch`` through the frozen
+        device plans of both sub-grids (DESIGN.md §4); numpy stays the
+        default and the correctness oracle.
+        """
         self.config = config
         self.data = np.ascontiguousarray(data, dtype=np.float32)
         self.n_rows, self.n_dims = self.data.shape
@@ -56,7 +63,20 @@ class COAXIndex:
             list(groups) if groups is not None else learn_soft_fds(self.data, config.softfd)
         )
         self.keep_dims = reduced_dims(self.n_dims, self.groups)
+        self._device_opts = device_opts
+        self.last_batch_stats = BatchStats()
         self._fit()
+        self.backend = backend
+
+    # ------------------------------------------------------------------ #
+    @property
+    def backend(self) -> str:
+        return self.primary.backend
+
+    @backend.setter
+    def backend(self, value: str) -> None:
+        self.primary.backend = value
+        self.outlier.backend = value
 
     # ------------------------------------------------------------------ #
     def _fit(self) -> None:
@@ -91,6 +111,7 @@ class COAXIndex:
         self.primary = GridFile(
             p_rows, index_dims=self.keep_dims, cells_per_dim=p_cells,
             sort_dim=sort_dim if self.keep_dims else None, quantile=True, row_ids=p_ids,
+            device_opts=self._device_opts,
         )
 
         # Outlier index: full-dimensional quantile grid with its own (much
@@ -103,6 +124,7 @@ class COAXIndex:
         self.outlier = GridFile(
             o_rows, index_dims=list(range(self.n_dims)), cells_per_dim=o_cells,
             sort_dim=sort_dim, quantile=True, row_ids=o_ids,
+            device_opts=self._device_opts,
         )
 
         # Bounding box of outliers lets us skip the outlier probe entirely
@@ -149,9 +171,12 @@ class COAXIndex:
         rects = np.asarray(rects, dtype=np.float64)
         b = rects.shape[0]
         if b == 0:
+            self.last_batch_stats = BatchStats(backend=self.backend)
             return np.empty(0, np.int64), np.empty(0, np.int64)
         nav = self.translate_batch(rects)
         q_p, r_p = self.primary.query_batch(nav, rects)
+        stats = dataclasses.replace(self.primary.last_batch_stats,
+                                    queries=b, backend=self.backend)
 
         if self._outlier_lo is not None:
             # same half-open/closed-bbox intersection test as ``query``
@@ -162,12 +187,14 @@ class COAXIndex:
             if touch.any():
                 sub = rects[touch]
                 q_o, r_o = self.outlier.query_batch(sub, sub)
+                stats = stats.merge(self.outlier.last_batch_stats)
                 if r_o.size:
                     q_o = np.nonzero(touch)[0][q_o]    # sub-batch ids -> batch ids
                     q_p = np.concatenate([q_p, q_o])
                     r_p = np.concatenate([r_p, r_o])
                     order = np.lexsort((r_p, q_p))     # merge the two hit lists
                     q_p, r_p = q_p[order], r_p[order]
+        self.last_batch_stats = stats
         return q_p, r_p
 
     def query_batch_split(self, rects: np.ndarray) -> List[np.ndarray]:

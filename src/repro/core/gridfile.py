@@ -22,12 +22,14 @@ import numpy as np
 
 from .types import Rect, rect_contains
 
-__all__ = ["GridFile", "gather_ranges", "fit_cells_per_dim", "batched_searchsorted"]
+__all__ = ["GridFile", "BatchStats", "gather_ranges", "fit_cells_per_dim",
+           "batched_searchsorted"]
 
 
 def batched_searchsorted(vals: np.ndarray, blk_lo: np.ndarray,
                          blk_hi: np.ndarray, target,
-                         side: str = "left") -> np.ndarray:
+                         side: str = "left",
+                         vals_finite: bool = False) -> np.ndarray:
     """Vectorised per-segment ``searchsorted``.
 
     For each segment ``[blk_lo[i], blk_hi[i])`` of the globally cell-sorted
@@ -39,16 +41,27 @@ def batched_searchsorted(vals: np.ndarray, blk_lo: np.ndarray,
     ``target`` may be a scalar (one query) or an array aligned with
     ``blk_lo`` (per-segment targets — the batched engine searches every
     (query, cell) pair in one pass).  ``-inf``/``+inf`` targets degenerate
-    to ``blk_lo``/``blk_hi`` respectively, i.e. "no constraint".
+    to ``blk_lo``/``blk_hi`` respectively, i.e. "no constraint" — when the
+    whole target is ±inf the loop is skipped outright (the +inf exit needs
+    ``vals_finite=True``, a fact callers can certify once at build time,
+    because a stored +inf would be a valid insertion point before the end).
+    Converged lanes mask their gather index to 0 instead of re-reading
+    ``vals`` every iteration — the gather is this loop's hot instruction.
     """
     lo = blk_lo.astype(np.int64).copy()
     hi = blk_hi.astype(np.int64).copy()
+    t = np.asarray(target)
+    if side == "left" and t.size:
+        if np.all(np.isneginf(t)):
+            return lo                               # insert at segment start
+        if vals_finite and np.all(np.isposinf(t)):
+            return np.where(lo < hi, hi, lo)        # insert at segment end
     while True:
         active = lo < hi
         if not active.any():
             return lo
         mid = (lo + hi) // 2
-        mv = vals[np.minimum(mid, vals.shape[0] - 1)]
+        mv = vals[np.where(active, mid, 0)]         # gather live lanes only
         if side == "left":
             go_right = active & (mv < target)
         else:
@@ -73,11 +86,19 @@ def f32_ceil(x: np.ndarray) -> np.ndarray:
     return np.where(rounded_down, np.nextafter(y, np.float32(np.inf)), y)
 
 
-def gather_ranges(los: np.ndarray, his: np.ndarray) -> np.ndarray:
-    """Concatenate ``arange(lo, hi)`` for many (lo, hi) pairs, vectorised."""
+def gather_ranges(los: np.ndarray, his: np.ndarray,
+                  lens: Optional[np.ndarray] = None) -> np.ndarray:
+    """Concatenate ``arange(lo, hi)`` for many (lo, hi) pairs, vectorised.
+
+    ``lens`` may be supplied when the caller has already computed the
+    clamped lengths ``maximum(his - los, 0)`` (the batched query path needs
+    them anyway for its query-id expansion) so the (query, cell) expansion
+    does a single pass over the pairs.
+    """
     los = np.asarray(los, dtype=np.int64)
     his = np.asarray(his, dtype=np.int64)
-    lens = np.maximum(his - los, 0)
+    if lens is None:
+        lens = np.maximum(his - los, 0)
     total = int(lens.sum())
     if total == 0:
         return np.empty(0, dtype=np.int64)
@@ -107,6 +128,32 @@ class _QueryStats:
     rows_matched: int = 0
 
 
+@dataclasses.dataclass
+class BatchStats:
+    """Planning-stage work counters for one ``query_batch`` call.
+
+    ``cells_probed``/``rows_scanned`` come from the index's planning stage
+    (candidate (query, cell) pairs and scan-window rows respectively), so
+    backend comparisons can report work done, not just wall-clock QPS.
+    ``fallbacks`` counts device waves that overflowed ``cell_cap`` and were
+    re-answered by the numpy path (DESIGN.md §4 overflow contract).
+    """
+    queries: int = 0
+    cells_probed: int = 0
+    rows_scanned: int = 0
+    backend: str = "numpy"
+    fallbacks: int = 0
+
+    def merge(self, other: "BatchStats") -> "BatchStats":
+        return BatchStats(
+            queries=max(self.queries, other.queries),
+            cells_probed=self.cells_probed + other.cells_probed,
+            rows_scanned=self.rows_scanned + other.rows_scanned,
+            backend=self.backend,
+            fallbacks=self.fallbacks + other.fallbacks,
+        )
+
+
 class GridFile:
     """Multidimensional grid index over a chosen subset of attributes.
 
@@ -121,6 +168,12 @@ class GridFile:
     quantile : CDF-aligned boundaries when True (paper/Column-Files style),
         uniform min..max boundaries when False (Uniform-Grid baseline).
     row_ids : original identities of ``data`` rows (defaults to arange(N)).
+    backend : ``"numpy"`` (default, the exact host path and correctness
+        oracle) or ``"device"`` — route ``query_batch`` through the frozen
+        jitted device plan (DESIGN.md §4), falling back to numpy when a
+        wave's candidate cells overflow the plan's cap.
+    device_opts : kwargs for ``engine.device.DevicePlan`` (cell_cap, tile,
+        min_bucket, use_pallas, interpret).
     """
 
     def __init__(
@@ -131,6 +184,8 @@ class GridFile:
         sort_dim: Optional[int] = None,
         quantile: bool = True,
         row_ids: Optional[np.ndarray] = None,
+        backend: str = "numpy",
+        device_opts: Optional[dict] = None,
     ):
         data = np.ascontiguousarray(data, dtype=np.float32)
         n, d_full = data.shape
@@ -183,7 +238,49 @@ class GridFile:
         self.sort_vals = (
             np.ascontiguousarray(self.rows[:, sort_dim]) if sort_dim is not None else None
         )
+        # certified once so batched_searchsorted can take its all-+inf exit
+        self._sort_finite = bool(
+            np.isfinite(self.sort_vals).all()) if self.sort_vals is not None else True
+        # certified once so the batch filter may skip unconstrained dims: a
+        # +inf/NaN record value fails `v < +inf` / any compare in the exact
+        # scalar and device paths, so the skip is only sound on finite data
+        self._rows_finite = bool(np.isfinite(self.rows).all()) if n else True
         self.last_query_stats = _QueryStats()
+        self.last_batch_stats = BatchStats()
+        self.device_opts = device_opts
+        self._device_plan = None
+        self._device_plan_failed = False
+        self.backend = backend
+
+    # ------------------------------------------------------------------ #
+    @property
+    def backend(self) -> str:
+        return self._backend
+
+    @backend.setter
+    def backend(self, value: str) -> None:
+        if value not in ("numpy", "device"):
+            raise ValueError(f"backend must be 'numpy' or 'device', got {value!r}")
+        self._backend = value
+
+    @property
+    def device_plan(self):
+        """Lazily-built frozen device plan (engine.device.DevicePlan).
+
+        Built (and uploaded) once on first use; ``None`` when jax is
+        unavailable, in which case the device backend silently degrades to
+        the numpy path.
+        """
+        if self._device_plan is None and not self._device_plan_failed:
+            try:
+                from ..engine.device import DevicePlan
+                self._device_plan = DevicePlan(self, **(self.device_opts or {}))
+            except ImportError as e:
+                import warnings
+                warnings.warn(
+                    f"device backend unavailable ({e}); using numpy path")
+                self._device_plan_failed = True
+        return self._device_plan
 
     # ------------------------------------------------------------------ #
     @property
@@ -251,9 +348,11 @@ class GridFile:
             lo_idx = blk_lo
             hi_idx = blk_hi
             if np.isfinite(q_lo):
-                lo_idx = batched_searchsorted(sv, blk_lo, blk_hi, q_lo, "left")
+                lo_idx = batched_searchsorted(sv, blk_lo, blk_hi, q_lo, "left",
+                                              vals_finite=self._sort_finite)
             if np.isfinite(q_hi):
-                hi_idx = batched_searchsorted(sv, lo_idx, blk_hi, q_hi, "left")
+                hi_idx = batched_searchsorted(sv, lo_idx, blk_hi, q_hi, "left",
+                                              vals_finite=self._sort_finite)
             blk_lo, blk_hi = lo_idx, hi_idx
 
         idx = gather_ranges(blk_lo, blk_hi)
@@ -336,10 +435,41 @@ class GridFile:
 
         Returns ``(query_ids, row_ids)`` — the flat hit list, sorted by
         (query_id, row_id); per query it equals ``query(nav, filter)``.
+
+        ``backend="device"`` routes through the frozen jitted device plan
+        (DESIGN.md §4) under the contract that ``nav_rects``
+        over-approximates ``filter_rects`` on the indexed dims — true for
+        Eq. 2 translation and for nav == filter; waves whose candidate
+        cells overflow the plan's cap fall back to this numpy path.
         """
         nav_rects = np.asarray(nav_rects, dtype=np.float64)
         filter_rects = np.asarray(filter_rects, dtype=np.float64)
+        b = nav_rects.shape[0]
+        fallbacks = 0
+        if self._backend == "device" and b:
+            plan = self.device_plan
+            if plan is not None:
+                res = plan.run_wave(nav_rects, filter_rects)
+                if res is not None:
+                    out_q, out_r, s = res
+                    self.last_batch_stats = BatchStats(
+                        queries=b, cells_probed=s["cells_probed"],
+                        rows_scanned=s["rows_scanned"], backend="device")
+                    return out_q, out_r
+                fallbacks = 1                   # cell_cap overflow -> numpy
+        return self._query_batch_numpy(nav_rects, filter_rects, fallbacks)
+
+    def _query_batch_numpy(
+        self, nav_rects: np.ndarray, filter_rects: np.ndarray,
+        fallbacks: int = 0,
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """The exact host implementation of ``query_batch`` (and the device
+        backend's overflow fallback / correctness oracle)."""
+        stats = BatchStats(queries=int(nav_rects.shape[0]),
+                           backend="numpy", fallbacks=fallbacks)
+        self.last_batch_stats = stats
         qids, cells = self.plan_batch(nav_rects)
+        stats.cells_probed = int(cells.size)
         if cells.size == 0:
             return np.empty(0, np.int64), np.empty(0, np.int64)
 
@@ -350,11 +480,14 @@ class GridFile:
             q_lo = nav_rects[qids, pos, 0]              # per-(query,cell) targets
             q_hi = nav_rects[qids, pos, 1]
             sv = self.sort_vals
-            blk_lo = batched_searchsorted(sv, blk_lo, blk_hi, q_lo, "left")
-            blk_hi = batched_searchsorted(sv, blk_lo, blk_hi, q_hi, "left")
+            blk_lo = batched_searchsorted(sv, blk_lo, blk_hi, q_lo, "left",
+                                          vals_finite=self._sort_finite)
+            blk_hi = batched_searchsorted(sv, blk_lo, blk_hi, q_hi, "left",
+                                          vals_finite=self._sort_finite)
 
         lens = np.maximum(blk_hi - blk_lo, 0)
-        idx = gather_ranges(blk_lo, blk_hi)
+        idx = gather_ranges(blk_lo, blk_hi, lens)       # one (query,cell) pass
+        stats.rows_scanned = int(idx.size)
         if idx.size == 0:
             return np.empty(0, np.int64), np.empty(0, np.int64)
         row_q = np.repeat(qids, lens)                   # owning query per row
@@ -367,7 +500,8 @@ class GridFile:
         hi32 = f32_ceil(filter_rects[:, :, 1])
         hit = np.ones(idx.size, dtype=bool)
         for j in range(self.d_full):
-            if np.isneginf(lo32[:, j]).all() and np.isposinf(hi32[:, j]).all():
+            if self._rows_finite and np.isneginf(lo32[:, j]).all() \
+                    and np.isposinf(hi32[:, j]).all():
                 continue                                # dim unconstrained
             v = rows[:, j]
             np.logical_and(hit, v >= lo32[row_q, j], out=hit)

@@ -78,7 +78,8 @@ class ShardedLoader:
         self.doc_ids = (np.arange(corpus.meta.shape[0], dtype=np.int64)
                         if doc_ids is None else np.asarray(doc_ids, np.int64))
         self.epoch = 0
-        self.cursor = 0  # batches served within this epoch (this host)
+        self.cursor = 0  # batches CONSUMED within this epoch (this host)
+        self._prefetch = prefetch
         self._queue: "queue.Queue" = queue.Queue(maxsize=prefetch)
         self._worker: Optional[threading.Thread] = None
         self._stop = threading.Event()
@@ -105,36 +106,50 @@ class ShardedLoader:
             toks[i] = np.tile(stream, reps)[: self.seq_len + 1]
         return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
 
-    def _next_indices(self):
-        order = self._epoch_order(self.epoch)
+    def _next_indices(self, epoch: int, cursor: int):
+        """Docs for position (epoch, cursor) plus the position AFTER it.
+
+        Pure in the loader's public state: the prefetch worker runs ahead of
+        the consumer with its own local position, and ``self.epoch``/
+        ``self.cursor`` only advance when a batch is actually consumed — so
+        ``state_dict`` is exact however far prefetch has run.
+        """
+        order = self._epoch_order(epoch)
         per_epoch = len(order) // self.batch_size
-        if self.cursor >= per_epoch:
-            self.epoch += 1
-            self.cursor = 0
-            order = self._epoch_order(self.epoch)
-        lo = self.cursor * self.batch_size
+        if cursor >= per_epoch:
+            epoch += 1
+            cursor = 0
+            order = self._epoch_order(epoch)
+        lo = cursor * self.batch_size
         docs = order[lo: lo + self.batch_size]
-        self.cursor += 1
-        return docs
+        return docs, epoch, cursor + 1
 
     def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
-        def work():
+        def work(epoch: int, cursor: int):
             while not self._stop.is_set():
-                docs = self._next_indices()
-                batch = self._build_batch(docs)
+                docs, epoch, cursor = self._next_indices(epoch, cursor)
+                item = (epoch, cursor, self._build_batch(docs))
                 while not self._stop.is_set():
                     try:
-                        self._queue.put(batch, timeout=0.2)
+                        self._queue.put(item, timeout=0.2)
                         break
                     except queue.Full:
                         continue
 
+        if self._worker is not None and self._worker.is_alive():
+            self._stop.set()                  # retire any previous worker
+            self._worker.join()               # before it can feed the new queue
         self._stop.clear()
-        self._worker = threading.Thread(target=work, daemon=True)
+        self._queue = queue.Queue(maxsize=self._prefetch)  # drop stale prefetch
+        self._worker = threading.Thread(
+            target=work, args=(self.epoch, self.cursor), daemon=True)
         self._worker.start()
         try:
             while True:
-                yield self._queue.get()
+                epoch, cursor, batch = self._queue.get()
+                # commit the consumed position (epoch rollover sets cursor=1)
+                self.epoch, self.cursor = epoch, cursor
+                yield batch
         finally:
             self._stop.set()
 

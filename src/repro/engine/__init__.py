@@ -1,4 +1,4 @@
-"""Batched query execution engine (DESIGN.md §2).
+"""Batched query execution engine (DESIGN.md §2, §4).
 
 The per-call path (``COAXIndex.query``) answers one rect per Python
 round-trip; this package turns B queries into one translation pass, one
@@ -8,6 +8,8 @@ pattern, applied to range-query traffic instead of decode requests.
 
 ``BatchQueryExecutor`` — wave-sliced ``query_batch`` driver with per-wave stats
 ``QueryServer``        — submit rects, drain in priority/FIFO waves
+``DevicePlan``         — frozen device-resident serving plane (§4); imported
+                         lazily so the numpy engine works without jax
 """
 from .executor import BatchQueryExecutor, WaveStats, split_hits
 from .server import PendingQuery, QueryServer
@@ -18,4 +20,13 @@ __all__ = [
     "split_hits",
     "QueryServer",
     "PendingQuery",
+    "DevicePlan",
+    "device_available",
 ]
+
+
+def __getattr__(name):  # PEP 562: keep jax out of the default import path
+    if name in ("DevicePlan", "device_available"):
+        from . import device
+        return getattr(device, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

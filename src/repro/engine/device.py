@@ -1,0 +1,354 @@
+"""Device-resident batch query plane (DESIGN.md §4).
+
+The numpy batch path (``GridFile.query_batch``) is a chain of host gathers
+and temporaries; this module fuses the whole per-wave pipeline — directory
+probe, per-segment binary search over the in-cell sorted attribute, and the
+final full-predicate filter — into ONE jitted fixed-shape device program so
+a wave costs one launch plus one hit-mask transfer back.
+
+Frozen plan (uploaded once at build):
+  * ``rows_t``    (D, N_pad) f32 column-major records, padded with ``+inf``
+    to a tile multiple (padding never matches: ``v < hi`` fails);
+  * ``sort_vals`` (N_pad,)  f32 in-cell sorted attribute;
+  * ``offsets``   (n_cells+1,) i32 cell block boundaries;
+  * ``edges_up`` / ``edges_down`` (k, c-1) f32 grid lines rounded toward
+    ``+inf`` / ``-inf`` — paired with query bounds rounded the OPPOSITE way
+    the f32 directory probe can only widen the candidate range vs the exact
+    float64 host probe, never narrow it (DESIGN.md §4, exactness argument).
+
+Per-wave pipeline (``_device_pipeline``, one ``jax.jit`` program):
+  1. probe: ``jnp.searchsorted`` over the stacked edges -> per-dim
+     [first, last] cell coordinates;
+  2. expand: mixed-radix decode of up to ``cell_cap`` candidate cells per
+     query (raggedness is padded; a host-side pre-check falls the wave back
+     to numpy when any query exceeds the cap);
+  3. bisect: a fixed-trip ``lax.fori_loop`` port of
+     ``core.gridfile.batched_searchsorted`` refines every (query, cell)
+     block against the sorted attribute;
+  4. window: min/max-reduce the refined blocks into one [lo, hi) scan
+     window per query (non-candidate rows inside the window are removed by
+     the exact full-predicate filter, so the union is safe — §4);
+  5. filter: the ``range_scan_batch`` Pallas kernel (or its jnp oracle on
+     CPU, same contract) evaluates every query's ceil-rounded f32 bounds
+     against the shared record block with per-query windows.
+
+Shape bucketing: the wave width B is padded up to a power-of-two bucket and
+candidate counts to ``cell_cap``, so steady-state serving re-enters an
+already-compiled executable — at most one compile per
+``(bucket_B, padded_N, D)`` (``DevicePlan.compile_count`` exposes the jit
+cache size for the regression test).
+
+Exactness contract: device results equal the numpy path whenever the
+nav-rect over-approximates the filter-rect on the indexed dims — which is
+exactly the COAX invariant (§7.1 translation for the primary index,
+nav == filter for the outlier/raw grid).  ``GridFile.query_batch`` only
+routes here under that contract.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import numpy as np
+
+from ..core.gridfile import f32_ceil
+
+__all__ = ["DevicePlan", "device_available", "f32_floor"]
+
+try:  # the container bakes jax in; gate anyway so numpy-only installs work
+    import jax
+    import jax.numpy as jnp
+    _HAVE_JAX = True
+except Exception:  # pragma: no cover - exercised only without jax
+    jax = None
+    jnp = None
+    _HAVE_JAX = False
+
+
+def device_available() -> bool:
+    """True when the jax runtime needed by ``DevicePlan`` is importable."""
+    return _HAVE_JAX
+
+
+def f32_floor(x: np.ndarray) -> np.ndarray:
+    """Largest float32 <= x, elementwise (the mirror of ``gridfile.f32_ceil``)."""
+    x = np.asarray(x, dtype=np.float64)
+    with np.errstate(over="ignore"):
+        y = x.astype(np.float32)
+    rounded_up = y.astype(np.float64) > x
+    return np.where(rounded_up, np.nextafter(y, np.float32(-np.inf)), y)
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(int(n - 1).bit_length(), 0) if n > 1 else 1
+
+
+def _bisect_device(vals, lo, hi, target, n_iter: int):
+    """Fixed-trip ``lax.fori_loop`` port of ``gridfile.batched_searchsorted``
+    (side="left"): per-segment insertion points of ``target`` in ``vals``.
+
+    ``lo``/``hi`` are (B, C) segment bounds; ``target`` broadcasts.  The trip
+    count is static (log2 of the longest possible segment), so converged
+    lanes just idle — the device analogue of the numpy loop's early exit.
+    """
+    def body(_, state):
+        lo, hi = state
+        active = lo < hi
+        mid = (lo + hi) // 2
+        mv = vals[jnp.where(active, mid, 0)]       # masked gather, like numpy
+        go_right = active & (mv < target)
+        return (jnp.where(go_right, mid + 1, lo),
+                jnp.where(active & ~go_right, mid, hi))
+
+    lo, hi = jax.lax.fori_loop(0, n_iter, body, (lo, hi))
+    return lo
+
+
+def _device_pipeline(
+    rows_t,        # (D, N_pad) f32
+    sort_vals,     # (N_pad,) f32 (dummy (1,) when has_sort=False)
+    offsets,       # (n_cells+1,) i32
+    edges_up,      # (k, c-1) f32, rounded up
+    edges_down,    # (k, c-1) f32, rounded down
+    glo, ghi,      # (Bp, k) f32 grid-dim bounds (lo rounded down, hi up)
+    t_lo, t_hi,    # (Bp,) f32 sorted-dim targets (ceil-rounded, exact)
+    flo, fhi,      # (Bp, D) f32 full-predicate bounds (ceil-rounded, exact)
+    *,
+    n_valid: int,
+    cells_per_dim: int,
+    cell_cap: int,
+    n_iter: int,
+    tile: int,
+    has_sort: bool,
+    use_pallas: bool,
+    interpret: bool,
+):
+    """The whole per-wave hot path as one fixed-shape jitted program.
+
+    Returns ``(mask (Bp, n_valid) bool, windows (Bp, 2) i32, scanned (Bp,))``.
+    """
+    from ..kernels import ref
+    from ..kernels.range_scan_batch import range_scan_batch
+
+    bp, k = glo.shape
+    c = cells_per_dim
+    n_pad = rows_t.shape[1]
+
+    # 1. directory probe (conservative f32 rounding can only widen) --------
+    if k and edges_up.shape[1]:
+        first = jnp.stack(
+            [jnp.searchsorted(edges_up[i], glo[:, i], side="right") for i in range(k)],
+            axis=1).astype(jnp.int32)                               # (Bp, k)
+        last = jnp.stack(
+            [jnp.searchsorted(edges_down[i], ghi[:, i], side="left") for i in range(k)],
+            axis=1).astype(jnp.int32)
+    else:  # 0 grid dims, or 1 cell per dim: every query sees cell range [0, 0]
+        first = jnp.zeros((bp, max(k, 1)), jnp.int32)
+        last = jnp.zeros((bp, max(k, 1)), jnp.int32)
+    counts = last - first + 1
+    ok = jnp.all(counts > 0, axis=1)
+    safe = jnp.maximum(counts, 1)
+    n_cells_q = jnp.where(ok, jnp.prod(safe, axis=1), 0)            # (Bp,)
+
+    # 2. candidate-cell expansion: mixed-radix decode into cell_cap slots --
+    j = jnp.arange(cell_cap, dtype=jnp.int32)[None, :]              # (1, cap)
+    valid = j < n_cells_q[:, None]                                  # (Bp, cap)
+    rev = jnp.cumprod(safe[:, ::-1], axis=1)[:, ::-1]               # suffix prods
+    strides = jnp.concatenate(
+        [rev[:, 1:], jnp.ones((bp, 1), rev.dtype)], axis=1)         # (Bp, kk)
+    flat = jnp.zeros((bp, cell_cap), jnp.int32)
+    for i in range(first.shape[1]):
+        digit = (j // strides[:, i:i + 1]) % safe[:, i:i + 1]
+        flat = flat * c + (first[:, i:i + 1] + digit.astype(jnp.int32))
+    cell = jnp.where(valid, flat, 0)
+
+    blk_lo = jnp.where(valid, offsets[cell], 0)
+    blk_hi = jnp.where(valid, offsets[cell + 1], 0)
+
+    # 3. per-segment binary search over the in-cell sorted attribute ------
+    if has_sort:
+        blk_lo = _bisect_device(sort_vals, blk_lo, blk_hi, t_lo[:, None], n_iter)
+        blk_hi = _bisect_device(sort_vals, blk_lo, blk_hi, t_hi[:, None], n_iter)
+
+    # 4. union scan window per query --------------------------------------
+    win_lo = jnp.min(jnp.where(valid, blk_lo, n_pad), axis=1)
+    win_hi = jnp.max(jnp.where(valid, blk_hi, 0), axis=1)
+    win_lo = jnp.minimum(win_lo, win_hi)           # empty -> [x, x)
+    windows = jnp.stack([win_lo, win_hi], axis=1).astype(jnp.int32)
+
+    # 5. windowed full-predicate filter (Pallas kernel / jnp oracle) ------
+    if use_pallas:
+        mask, _ = range_scan_batch(rows_t, flo.T, fhi.T, windows,
+                                   tile=tile, interpret=interpret)
+    else:
+        mask, _ = ref.range_scan_batch_ref(rows_t, flo.T, fhi.T, windows, tile=tile)
+    return mask[:, :n_valid].astype(bool), windows, win_hi - win_lo
+
+
+class DevicePlan:
+    """Frozen device-resident image of one ``GridFile`` plus its compiled
+    per-wave pipeline (DESIGN.md §4).
+
+    Parameters
+    ----------
+    grid : the host ``GridFile`` to freeze (arrays are uploaded once here).
+    cell_cap : per-query candidate-cell budget; waves where any query's
+        directory probe exceeds it return ``None`` from ``run_wave`` so the
+        caller falls back to the numpy path (the overflow contract, §4).
+    tile : record tile width for the scan kernel (N is padded to a multiple).
+    min_bucket : smallest wave bucket; B pads up to ``max(min_bucket,
+        next_pow2(B))`` so steady-state widths share compiled shapes.
+    use_pallas : route step 5 through the Pallas kernel; ``None`` picks the
+        kernel on real accelerators and the jnp oracle (same contract,
+        XLA-compiled) on CPU, where interpret-mode Pallas is a correctness
+        tool rather than a fast path.
+    """
+
+    def __init__(self, grid, *, cell_cap: int = 256, tile: int = 512,
+                 min_bucket: int = 4, use_pallas: Optional[bool] = None,
+                 interpret: Optional[bool] = None):
+        if not _HAVE_JAX:
+            raise ImportError("jax is required for the device backend")
+        self.grid = grid
+        self.cell_cap = int(cell_cap)
+        self.tile = int(tile)
+        self.min_bucket = int(min_bucket)
+        on_cpu = jax.default_backend() == "cpu"
+        self.use_pallas = (not on_cpu) if use_pallas is None else bool(use_pallas)
+        self.interpret = on_cpu if interpret is None else bool(interpret)
+
+        n, k = grid.n_rows, len(grid.grid_dims)
+        self.n_rows = n
+        self._grid_pos = [grid.index_dims.index(d) for d in grid.grid_dims]
+        self._sort_pos = (grid.index_dims.index(grid.sort_dim)
+                          if grid.sort_dim is not None else None)
+
+        # conservative f32 images of the float64 grid lines (host + device)
+        edges = (np.stack(grid.inner_edges) if k
+                 else np.zeros((0, 0), np.float64))
+        self._edges_up_h = f32_ceil(edges).astype(np.float32)
+        self._edges_down_h = f32_floor(edges).astype(np.float32)
+
+        if n:
+            pad = (-n) % self.tile
+            rows_t = np.pad(grid.rows.T, ((0, 0), (0, pad)),
+                            constant_values=np.inf)
+            sv = (np.pad(grid.sort_vals, (0, pad), constant_values=np.inf)
+                  if grid.sort_vals is not None else np.zeros(1, np.float32))
+            self.rows_t = jnp.asarray(rows_t, jnp.float32)
+            self.sort_vals = jnp.asarray(sv, jnp.float32)
+            self.offsets = jnp.asarray(grid.offsets, jnp.int32)
+            self.edges_up = jnp.asarray(self._edges_up_h)
+            self.edges_down = jnp.asarray(self._edges_down_h)
+            n_iter = int(np.ceil(np.log2(max(n, 2)))) + 1
+            self._fn = jax.jit(functools.partial(
+                _device_pipeline,
+                n_valid=n, cells_per_dim=grid.cells_per_dim,
+                cell_cap=self.cell_cap, n_iter=n_iter, tile=self.tile,
+                has_sort=grid.sort_vals is not None,
+                use_pallas=self.use_pallas, interpret=self.interpret,
+            ))
+        else:
+            self._fn = None
+        self._shapes_seen: set = set()
+
+    # ------------------------------------------------------------------ #
+    @property
+    def compile_count(self) -> int:
+        """Distinct compiled shapes so far — the §4 cache-policy metric."""
+        if self._fn is not None and hasattr(self._fn, "_cache_size"):
+            return int(self._fn._cache_size())
+        return len(self._shapes_seen)
+
+    def bucket(self, b: int) -> int:
+        return max(self.min_bucket, _next_pow2(b))
+
+    # ------------------------------------------------------------------ #
+    def plan_counts(self, nav_rects: np.ndarray,
+                    bounds: Optional[tuple] = None) -> np.ndarray:
+        """Per-query candidate-cell counts under the DEVICE probe (the same
+        conservative f32 rounding), used for the overflow pre-check and the
+        ``cells_probed`` stat.  Pure host numpy — O(B * k * log c).
+        ``bounds`` may carry precomputed ``_grid_bounds`` output."""
+        b = nav_rects.shape[0]
+        k = len(self.grid.grid_dims)
+        if k == 0 or self._edges_up_h.shape[1] == 0:
+            return np.ones(b, dtype=np.int64)
+        glo, ghi = bounds if bounds is not None else self._grid_bounds(nav_rects)
+        first = np.stack(
+            [np.searchsorted(self._edges_up_h[i], glo[:, i], side="right")
+             for i in range(k)], axis=1)
+        last = np.stack(
+            [np.searchsorted(self._edges_down_h[i], ghi[:, i], side="left")
+             for i in range(k)], axis=1)
+        counts = last - first + 1
+        return np.where((counts > 0).all(axis=1),
+                        np.maximum(counts, 1).prod(axis=1), 0)
+
+    def _grid_bounds(self, nav_rects: np.ndarray):
+        glo = f32_floor(nav_rects[:, self._grid_pos, 0]).astype(np.float32)
+        ghi = f32_ceil(nav_rects[:, self._grid_pos, 1]).astype(np.float32)
+        return glo, ghi
+
+    # ------------------------------------------------------------------ #
+    def run_wave(
+        self, nav_rects: np.ndarray, filter_rects: np.ndarray
+    ) -> Optional[Tuple[np.ndarray, np.ndarray, dict]]:
+        """Answer one wave on the device.
+
+        Returns ``(query_ids, row_ids, stats)`` with the exact
+        ``query_batch`` contract, or ``None`` when any query's candidate
+        cells overflow ``cell_cap`` (caller falls back to numpy).
+        """
+        b = nav_rects.shape[0]
+        empty = (np.empty(0, np.int64), np.empty(0, np.int64),
+                 {"cells_probed": 0, "rows_scanned": 0})
+        if b == 0 or self.n_rows == 0:
+            return empty
+        glo, ghi = self._grid_bounds(nav_rects)
+        n_cells_q = self.plan_counts(nav_rects, bounds=(glo, ghi))
+        if int(n_cells_q.max(initial=0)) > self.cell_cap:
+            return None                                   # overflow fallback
+
+        bp = self.bucket(b)
+        k = len(self.grid.grid_dims)
+        glo = self._pad_rows(glo, bp, np.inf)             # inert queries:
+        ghi = self._pad_rows(ghi, bp, -np.inf)            # empty cell range
+        if self._sort_pos is not None:
+            t_lo = f32_ceil(nav_rects[:, self._sort_pos, 0]).astype(np.float32)
+            t_hi = f32_ceil(nav_rects[:, self._sort_pos, 1]).astype(np.float32)
+        else:
+            t_lo = np.full(b, -np.inf, np.float32)
+            t_hi = np.full(b, np.inf, np.float32)
+        t_lo = self._pad_rows(t_lo[:, None], bp, np.inf)[:, 0]
+        t_hi = self._pad_rows(t_hi[:, None], bp, -np.inf)[:, 0]
+        flo = self._pad_rows(f32_ceil(filter_rects[:, :, 0]).astype(np.float32),
+                             bp, np.inf)
+        fhi = self._pad_rows(f32_ceil(filter_rects[:, :, 1]).astype(np.float32),
+                             bp, -np.inf)
+
+        mask, windows, scanned = self._fn(
+            self.rows_t, self.sort_vals, self.offsets,
+            self.edges_up, self.edges_down,
+            jnp.asarray(glo.reshape(bp, k)), jnp.asarray(ghi.reshape(bp, k)),
+            jnp.asarray(t_lo), jnp.asarray(t_hi),
+            jnp.asarray(flo), jnp.asarray(fhi))
+        self._shapes_seen.add((bp, k))
+
+        mask = np.asarray(mask)[:b]                       # one transfer back
+        qids, ridx = np.nonzero(mask)
+        out_q = qids.astype(np.int64)
+        out_r = self.grid.row_ids[ridx]
+        order = np.lexsort((out_r, out_q))
+        stats = {
+            "cells_probed": int(n_cells_q.sum()),
+            "rows_scanned": int(np.asarray(scanned)[:b].sum()),
+        }
+        return out_q[order], out_r[order], stats
+
+    @staticmethod
+    def _pad_rows(a: np.ndarray, bp: int, value) -> np.ndarray:
+        b = a.shape[0]
+        if b == bp:
+            return a
+        return np.pad(a, ((0, bp - b), (0, 0)), constant_values=value)

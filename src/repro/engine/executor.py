@@ -5,7 +5,12 @@ vectorised index path: it slices the pile into waves of at most
 ``max_batch`` queries (bounding the flat candidate/hit buffers the batched
 grid probe materialises), runs each wave through one ``query_batch`` call,
 and keeps per-wave stats so the serving loop can report QPS and hit rates.
+Per-wave ``rows_scanned``/``cells_probed`` come from the index's planning
+stage (``last_batch_stats``), so backend comparisons report work done, not
+just wall-clock throughput.
 
+``backend="device"`` routes waves through the index's device-resident plan
+(DESIGN.md §4); numpy stays the default and the correctness oracle.
 Indexes without a ``query_batch`` (e.g. the §8.1.3 baselines) degrade to a
 per-rect loop inside the same interface, which is also what the benchmark's
 ``--batch`` mode compares against.
@@ -14,7 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -29,6 +34,10 @@ class WaveStats:
     n_queries: int
     n_hits: int
     latency_s: float
+    rows_scanned: int = 0        # scan-window rows the planning stage visited
+    cells_probed: int = 0        # candidate (query, cell) pairs enumerated
+    backend: str = "numpy"       # backend that answered this wave
+    fallbacks: int = 0           # device waves re-answered by numpy (§4)
 
     @property
     def qps(self) -> float:
@@ -43,15 +52,27 @@ class BatchQueryExecutor:
     index : any engine with ``query(rect)``; ``query_batch(rects)`` (flat
         (query_ids, row_ids) contract) is used when present.
     max_batch : wave width — queries per fused ``query_batch`` call.
+    backend : ``None`` leaves the index's backend untouched; ``"numpy"`` /
+        ``"device"`` set it on indexes that expose one (GridFile/COAXIndex)
+        before the first wave.  Requesting ``"device"`` on an index without
+        backend support raises.
     """
 
-    def __init__(self, index, max_batch: int = 64):
+    def __init__(self, index, max_batch: int = 64,
+                 backend: Optional[str] = None):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         self.index = index
         self.max_batch = max_batch
         self.wave_stats: List[WaveStats] = []
         self._batched = hasattr(index, "query_batch")
+        if backend is not None:
+            if hasattr(index, "backend"):
+                index.backend = backend
+            elif backend != "numpy":
+                raise ValueError(
+                    f"{type(index).__name__} has no device backend")
+        self.backend = backend or getattr(index, "backend", "numpy")
 
     # ------------------------------------------------------------------ #
     def _run_wave(self, rects: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
@@ -74,9 +95,14 @@ class BatchQueryExecutor:
             qids, rids = self._run_wave(wave)
             dt = time.perf_counter() - t0
             out.extend(split_hits(qids, rids, wave.shape[0]))
-            self.wave_stats.append(
-                WaveStats(len(self.wave_stats), int(wave.shape[0]),
-                          int(rids.size), dt))
+            bs = getattr(self.index, "last_batch_stats", None) \
+                if self._batched else None
+            self.wave_stats.append(WaveStats(
+                len(self.wave_stats), int(wave.shape[0]), int(rids.size), dt,
+                rows_scanned=bs.rows_scanned if bs else 0,
+                cells_probed=bs.cells_probed if bs else 0,
+                backend=bs.backend if bs else self.backend,
+                fallbacks=bs.fallbacks if bs else 0))
         return out
 
     # ------------------------------------------------------------------ #
@@ -87,9 +113,13 @@ class BatchQueryExecutor:
             "waves": len(self.wave_stats),
             "queries": total_q,
             "hits": sum(w.n_hits for w in self.wave_stats),
+            "rows_scanned": sum(w.rows_scanned for w in self.wave_stats),
+            "cells_probed": sum(w.cells_probed for w in self.wave_stats),
+            "device_fallbacks": sum(w.fallbacks for w in self.wave_stats),
             "total_s": total_s,
             "qps": total_q / total_s if total_s > 0 else 0.0,
             "batched": self._batched,
+            "backend": self.backend,
         }
 
     def reset_stats(self) -> None:

@@ -36,11 +36,15 @@ class QueryServer:
     ----------
     index : engine handed to ``BatchQueryExecutor`` (COAXIndex or baseline).
     max_batch : queries fused per wave.
+    backend : forwarded to ``BatchQueryExecutor`` — ``"device"`` serves
+        waves from the index's device-resident plan (DESIGN.md §4).
     """
 
     def __init__(self, index, max_batch: int = 64,
-                 executor: Optional[BatchQueryExecutor] = None):
-        self.executor = executor or BatchQueryExecutor(index, max_batch=max_batch)
+                 executor: Optional[BatchQueryExecutor] = None,
+                 backend: Optional[str] = None):
+        self.executor = executor or BatchQueryExecutor(
+            index, max_batch=max_batch, backend=backend)
         self._pending: Dict[int, PendingQuery] = {}
         self._ids = itertools.count()
         self.waves_drained = 0

@@ -3,7 +3,9 @@
 Each kernel file contains the ``pl.pallas_call`` + BlockSpec tiling; ``ops``
 exposes padded jit'd wrappers; ``ref`` holds the pure-jnp oracles the tests
 compare against.  All kernels are validated in interpret mode on CPU; the
-BlockSpecs target TPU v5e VMEM/VPU/MXU geometry (DESIGN.md §3).
+BlockSpecs target TPU v5e VMEM/VPU/MXU geometry (DESIGN.md §3).  The
+device-resident serving plane (``engine.device``, DESIGN.md §4) embeds
+``range_scan_batch`` as the filter stage of its fused per-wave program.
 """
 from .ops import (bucket_histogram, range_scan_batch_query, range_scan_query,
                   split_by_margin)

@@ -4,7 +4,10 @@ These handle ragged sizes (padding to tile multiples), parameter packing,
 and expose numpy-friendly entry points the COAX core and benchmarks call.
 ``use_pallas=False`` routes to the pure-jnp oracle (identical results) —
 the default on CPU, where interpret-mode Pallas is a correctness tool, not
-a fast path.
+a fast path.  The device serving plane (``engine.device``, DESIGN.md §4)
+bypasses these host-facing wrappers: it calls ``range_scan_batch`` /
+``ref.range_scan_batch_ref`` directly inside its own jitted pipeline with
+plan-resident pre-padded arrays.
 """
 from __future__ import annotations
 

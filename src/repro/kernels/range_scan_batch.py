@@ -1,4 +1,5 @@
-"""Pallas TPU kernel for the batched COAX range scan (DESIGN.md §3).
+"""Pallas TPU kernel for the batched COAX range scan (DESIGN.md §3; the
+filter stage of the §4 device serving plane).
 
 ``range_scan.py`` evaluates ONE translated rectangle per launch; the batched
 engine instead fuses B queries into a single ``pl.pallas_call`` so the record

@@ -2,7 +2,9 @@
 
 Each ``*_ref`` mirrors its kernel's exact contract (same inputs incl. padding
 and params vectors, same outputs) so the tests can ``assert_allclose`` across
-shape/dtype sweeps, and doubles as the CPU fallback path.
+shape/dtype sweeps, and doubles as the CPU fallback path — notably
+``range_scan_batch_ref`` is the CPU filter stage of the device serving
+plane's fused per-wave program (``engine.device``, DESIGN.md §4).
 """
 from __future__ import annotations
 

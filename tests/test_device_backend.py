@@ -1,0 +1,219 @@
+"""Device-resident serving plane (DESIGN.md §4): device/numpy equivalence.
+
+The contract under test: ``backend="device"`` returns EXACTLY the numpy
+path's ``(query_ids, row_ids)`` on every workload — including waves that
+overflow the candidate-cell cap and fall back to numpy — and steady-state
+serving compiles at most once per ``(bucket_B, padded_N, D)`` shape.
+"""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.core import (COAXIndex, GridFile, full_rect, point_rect)
+from repro.data import knn_rect_queries, make_airline, make_generic_fd, make_osm
+from repro.engine import BatchQueryExecutor, QueryServer, split_hits
+
+
+def _workloads():
+    # same 4 synthetic workloads as tests/test_engine.py
+    return [
+        ("airline", make_airline(20_000, seed=3)),
+        ("osm", make_osm(20_000, seed=3)),
+        ("generic_fd", make_generic_fd(15_000, 5, ((0, 1), (2, 3)), seed=7)),
+        ("generic_no_outliers",
+         make_generic_fd(15_000, 4, ((0, 1),), outlier_frac=0.0, seed=11)),
+    ]
+
+
+def _rects_for(data, n=24, seed=0):
+    d = data.shape[1]
+    rects = list(knn_rect_queries(data, n, 64, seed=seed, sample_cap=10_000))
+    rects.append(full_rect(d))                            # full-range rect
+    rects.append(np.stack([np.full(d, 1e12), np.full(d, 1e12 + 1)], axis=-1))
+    rects.append(point_rect(data[0]))                     # empty-result rect
+    lop = np.full(d, -np.inf); lop[0] = float(np.median(data[:, 0]))
+    rects.append(np.stack([lop, np.full(d, np.inf)], axis=-1))  # half-open
+    return np.stack(rects)
+
+
+@pytest.mark.parametrize("name,ds", _workloads(), ids=lambda w: w if isinstance(w, str) else "")
+def test_device_equals_numpy_and_scalar(name, ds):
+    idx = COAXIndex(ds.data)
+    rects = _rects_for(ds.data)
+    q_n, r_n = idx.query_batch(rects)
+    idx.backend = "device"
+    q_d, r_d = idx.query_batch(rects)
+    assert np.array_equal(q_d, q_n), name
+    assert np.array_equal(r_d, r_n), name
+    assert np.all(np.diff(q_d) >= 0)
+    per_query = split_hits(q_d, r_d, rects.shape[0])
+    idx.backend = "numpy"
+    for i, r in enumerate(rects):
+        assert np.array_equal(per_query[i], idx.query(r)), (name, i)
+
+
+@pytest.mark.parametrize("sort_dim", [None, 0, 2])
+def test_gridfile_device_equals_numpy(sort_dim):
+    rng = np.random.default_rng(4)
+    data = rng.normal(0, 10, (6_000, 3)).astype(np.float32)
+    gf = GridFile(data, index_dims=[0, 1, 2], cells_per_dim=5,
+                  sort_dim=sort_dim, backend="device")
+    rects = np.sort(rng.uniform(-20, 20, (40, 3, 2)), axis=-1)
+    rects[0] = full_rect(3)
+    q_d, r_d = gf.query_batch(rects, rects)
+    gf.backend = "numpy"
+    q_n, r_n = gf.query_batch(rects, rects)
+    assert np.array_equal(q_d, q_n) and np.array_equal(r_d, r_n), sort_dim
+
+
+def test_device_pallas_kernel_path():
+    """The same pipeline with the Pallas kernel (interpret mode) slotted in
+    for step 5 instead of the jnp oracle — identical results."""
+    rng = np.random.default_rng(7)
+    data = rng.normal(0, 10, (1_500, 3)).astype(np.float32)
+    rects = np.sort(rng.uniform(-20, 20, (8, 3, 2)), axis=-1)
+    rects[0] = full_rect(3)
+    gf = GridFile(data, index_dims=[0, 1, 2], cells_per_dim=4, sort_dim=1,
+                  backend="device",
+                  device_opts={"use_pallas": True, "interpret": True, "tile": 256})
+    q_d, r_d = gf.query_batch(rects, rects)
+    gf.backend = "numpy"
+    q_n, r_n = gf.query_batch(rects, rects)
+    assert np.array_equal(q_d, q_n) and np.array_equal(r_d, r_n)
+
+
+def test_device_empty_batch_and_empty_index():
+    ds = make_airline(5_000, seed=1)
+    idx = COAXIndex(ds.data, backend="device")
+    q, r = idx.query_batch(np.zeros((0, ds.data.shape[1], 2)))
+    assert q.size == 0 and r.size == 0
+    gf = GridFile(np.empty((0, 2), np.float32), index_dims=[0, 1],
+                  cells_per_dim=3, backend="device")
+    q, r = gf.query_batch(full_rect(2)[None], full_rect(2)[None])
+    assert q.size == 0 and r.size == 0
+
+
+def test_device_all_outlier_queries():
+    """Point queries aimed only at outlier rows: the primary probe returns
+    nothing, every hit flows through the outlier grid's device plan."""
+    ds = make_generic_fd(15_000, 5, ((0, 1), (2, 3)), seed=7)
+    idx = COAXIndex(ds.data)
+    assert idx.outlier.n_rows > 0
+    o_rows = ds.data[idx.outlier.row_ids[:12]]
+    rects = np.stack([point_rect(p) for p in o_rows])
+    q_n, r_n = idx.query_batch(rects)
+    assert r_n.size >= rects.shape[0]          # every target row is a hit
+    idx.backend = "device"
+    q_d, r_d = idx.query_batch(rects)
+    assert np.array_equal(q_d, q_n) and np.array_equal(r_d, r_n)
+
+
+def test_device_f32_range_bounds():
+    """Rect bounds beyond float32 range exercise the f32_ceil/f32_floor
+    +-inf padding interplay: +-1e39 must behave like +-inf, and bounds just
+    inside f32 range must not round across any record value."""
+    ds = make_airline(8_000, seed=2)
+    d = ds.data.shape[1]
+    idx = COAXIndex(ds.data)
+    rects = np.stack([
+        np.stack([np.full(d, -1e39), np.full(d, 1e39)], axis=-1),   # ~full
+        np.stack([np.full(d, 1e38), np.full(d, 1e39)], axis=-1),    # empty
+        np.stack([np.full(d, -1e39), ds.data[0].astype(np.float64)], axis=-1),
+        point_rect(ds.data[3]),
+    ])
+    q_n, r_n = idx.query_batch(rects)
+    assert split_hits(q_n, r_n, 4)[0].size == ds.data.shape[0]      # full hit
+    idx.backend = "device"
+    q_d, r_d = idx.query_batch(rects)
+    assert np.array_equal(q_d, q_n) and np.array_equal(r_d, r_n)
+
+
+def test_overflow_fallback_matches_numpy():
+    """cell_cap=1 forces every multi-cell wave back to the numpy path; the
+    contract (identical hits) must hold across the fallback seam."""
+    rng = np.random.default_rng(9)
+    data = rng.normal(0, 10, (4_000, 3)).astype(np.float32)
+    rects = np.sort(rng.uniform(-20, 20, (16, 3, 2)), axis=-1)
+    gf = GridFile(data, index_dims=[0, 1, 2], cells_per_dim=5, sort_dim=1,
+                  backend="device", device_opts={"cell_cap": 1})
+    q_d, r_d = gf.query_batch(rects, rects)
+    assert gf.last_batch_stats.fallbacks == 1
+    assert gf.last_batch_stats.backend == "numpy"
+    gf.backend = "numpy"
+    q_n, r_n = gf.query_batch(rects, rects)
+    assert np.array_equal(q_d, q_n) and np.array_equal(r_d, r_n)
+
+
+def test_compile_cache_and_bucketed_shapes():
+    """Steady-state serving compiles at most once per (bucket_B, N, D):
+    repeated same-width waves reuse one executable; a single execute() call
+    spanning two wave widths (8 + 4) compiles exactly two shapes."""
+    rng = np.random.default_rng(11)
+    data = rng.normal(0, 10, (6_000, 3)).astype(np.float32)
+    gf = GridFile(data, index_dims=[0, 1, 2], cells_per_dim=4, sort_dim=2,
+                  backend="device")
+    rects = np.sort(rng.uniform(-20, 20, (12, 3, 2)), axis=-1)
+
+    ex = BatchQueryExecutor(gf_wrap(gf), max_batch=8, backend="device")
+    plan = gf.device_plan
+    assert plan is not None
+    for _ in range(3):                       # repeated same-shape waves
+        ex.execute(rects[:8])
+    assert plan.compile_count == 1, "steady-state wave recompiled"
+
+    got = ex.execute(rects)                  # one call, waves of 8 and 4
+    assert plan.compile_count == 2, "second bucket shape should compile once"
+    for _ in range(2):
+        ex.execute(rects)
+    assert plan.compile_count == 2, "repeat waves must hit the jit cache"
+
+    gf.backend = "numpy"
+    for i, r in enumerate(rects):
+        assert np.array_equal(got[i], gf.query(r, r)), i
+
+
+def gf_wrap(gf):
+    """Adapter giving a raw GridFile the (rects,)-shaped query_batch the
+    executor drives (nav == filter), plus backend passthrough."""
+    class _W:
+        backend = property(lambda s: gf.backend,
+                           lambda s, v: setattr(gf, "backend", v))
+
+        def query_batch(self, rects):
+            return gf.query_batch(rects, rects)
+
+        @property
+        def last_batch_stats(self):
+            return gf.last_batch_stats
+    return _W()
+
+
+def test_executor_and_server_device_plumbing():
+    ds = make_osm(8_000, seed=5)
+    idx = COAXIndex(ds.data)
+    rects = _rects_for(ds.data, n=10, seed=3)[:10]
+    ex = BatchQueryExecutor(idx, max_batch=4, backend="device")
+    assert idx.backend == "device" and ex.backend == "device"
+    got = ex.execute(rects)
+    s = ex.stats()
+    assert s["backend"] == "device"
+    assert s["rows_scanned"] > 0 and s["cells_probed"] > 0
+    assert any(w.backend == "device" for w in ex.wave_stats)
+
+    srv = QueryServer(COAXIndex(ds.data), max_batch=4, backend="device")
+    qids = srv.submit_many(rects)
+    results = srv.drain()
+    idx.backend = "numpy"
+    for qid, r, g in zip(qids, rects, got):
+        assert np.array_equal(results[qid], g)
+        assert np.array_equal(g, idx.query(r))
+
+
+def test_executor_backend_validation():
+    from repro.core import FullScan
+    ds = make_airline(2_000, seed=0)
+    with pytest.raises(ValueError):
+        BatchQueryExecutor(FullScan(ds.data), backend="device")
+    ex = BatchQueryExecutor(FullScan(ds.data), backend="numpy")
+    assert ex.backend == "numpy"

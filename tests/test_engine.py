@@ -147,6 +147,61 @@ def test_executor_waves_and_fallback():
     assert s["waves"] == -(-rects.shape[0] // 4) and s["queries"] == rects.shape[0]
 
 
+def test_wavestats_report_planning_work():
+    """Per-wave rows_scanned/cells_probed surface the index's planning-stage
+    work so backend comparisons report work done, not just QPS."""
+    ds = make_airline(8_000, seed=2)
+    idx = COAXIndex(ds.data)
+    rects = _rects_for(ds.data, n=10, seed=3)
+    ex = BatchQueryExecutor(idx, max_batch=4)
+    ex.execute(rects)
+    s = ex.stats()
+    assert s["rows_scanned"] > 0 and s["cells_probed"] > 0
+    assert s["backend"] == "numpy" and s["device_fallbacks"] == 0
+    assert sum(w.rows_scanned for w in ex.wave_stats) == s["rows_scanned"]
+    assert sum(w.cells_probed for w in ex.wave_stats) == s["cells_probed"]
+    assert all(w.rows_scanned >= w.n_hits for w in ex.wave_stats)
+    # the full-range rect's wave must have scanned at least every row once
+    assert s["rows_scanned"] >= ds.data.shape[0]
+
+
+def test_batched_searchsorted_inf_early_exits():
+    from repro.core import batched_searchsorted
+    rng = np.random.default_rng(0)
+    vals = np.sort(rng.normal(0, 5, 64)).astype(np.float32)
+    blk_lo = np.array([0, 10, 30, 50, 60])
+    blk_hi = np.array([10, 30, 50, 60, 64])
+
+    def brute(target, side="left"):
+        t = np.broadcast_to(np.asarray(target, np.float64), blk_lo.shape)
+        return np.array([l + np.searchsorted(vals[l:h], tv, side=side)
+                         for l, h, tv in zip(blk_lo, blk_hi, t)])
+
+    for t in (-np.inf, np.inf, 0.0,
+              np.full(5, -np.inf), np.full(5, np.inf),
+              np.array([-np.inf, 0.5, np.inf, -1.0, np.inf])):
+        got = batched_searchsorted(vals, blk_lo, blk_hi, t, "left",
+                                   vals_finite=True)
+        assert np.array_equal(got, brute(t)), t
+    # +inf target over vals that CONTAIN +inf: the early exit must be
+    # declined (vals_finite=False) and the loop answer stays exact.
+    vals_inf = vals.copy(); vals_inf[40:] = np.inf
+    vals_inf = np.concatenate([np.sort(vals_inf[:30]), np.sort(vals_inf[30:])])
+    got = batched_searchsorted(vals_inf, blk_lo, blk_hi, np.inf, "left")
+    want = np.array([l + np.searchsorted(vals_inf[l:h], np.inf, side="left")
+                     for l, h in zip(blk_lo, blk_hi)])
+    assert np.array_equal(got, want)
+
+
+def test_gather_ranges_accepts_precomputed_lens():
+    from repro.core import gather_ranges
+    los = np.array([0, 5, 9, 7])
+    his = np.array([2, 5, 12, 3])            # one inverted pair -> len 0
+    lens = np.maximum(his - los, 0)
+    assert np.array_equal(gather_ranges(los, his, lens),
+                          gather_ranges(los, his))
+
+
 def test_query_server_drains_priority_waves():
     ds = make_airline(8_000, seed=2)
     idx = COAXIndex(ds.data)
