@@ -11,8 +11,13 @@ vs the per-query loop across batch sizes, emitted to ``BENCH_queries.json``.
 ``--backend {numpy,device,both}`` additionally sweeps the device-resident
 serving plane (DESIGN.md §4) over the same waves — the ``device_qps``
 section — asserting both backends return identical hits before timing.
+``--mixed`` drives the mutable lifecycle (DESIGN.md §5): a ``QueryServer``
+interleaving query waves with insert/delete admissions at a sweep of write
+ratios (FD-violating insert bursts included, so compaction and drift
+relearns fire), emitted to ``BENCH_updates.json``.
 ``--smoke`` shrinks the sweep and turns the throughput/agreement checks
-into hard assertions for CI.
+into hard assertions for CI — for ``--mixed`` the gate is hit agreement
+between the mutated index and a rebuild-from-scratch oracle.
 """
 from __future__ import annotations
 
@@ -26,6 +31,7 @@ import numpy as np
 from .common import PCFG, dataset, emit, queries, time_queries
 from repro.core import (COAXIndex, CoaxConfig, ColumnFiles, FullScan, STRTree,
                         UniformGrid, point_rect)
+from repro.data import knn_rect_queries
 from repro.engine import BatchQueryExecutor
 
 SWEEPS = {
@@ -176,10 +182,110 @@ def run_batch(rows: int = 100_000, n_queries: int = 256,
     return result
 
 
+def run_mixed(rows: int = 50_000, n_queries: int = 192,
+              insert_ratios=(0.1, 0.25, 0.5), batch: int = 64,
+              out_path: str = None, smoke: bool = False) -> dict:
+    """Mixed read/write workload (DESIGN.md §5).
+
+    For each write ratio ``r`` a fresh ``COAXIndex`` (auto-compaction on)
+    is driven through a ``QueryServer``: every wave of ``batch`` queries is
+    preceded by ``r/(1-r)`` write admissions — inserts of 32-row batches
+    drawn from held-out airline rows (every 4th batch FD-VIOLATING, so the
+    outlier delta and the drift tracker see real work) and deletes of 16
+    random original ids — flushed at the wave boundary under the server's
+    per-wave snapshot semantics.  Reported per ratio: sustained query QPS,
+    write throughput, and the lifecycle counters (epoch, compactions,
+    residual delta rows).  ``smoke`` gates every ratio's final state on hit
+    agreement with a rebuild-from-scratch oracle (a fresh ``COAXIndex``
+    over ``live_rows()``), on the device backend too when jax is present.
+    """
+    from repro.engine import QueryServer
+
+    ds = dataset("airline", rows * 2)           # second half = insert pool
+    base = np.ascontiguousarray(ds.data[:rows])
+    pool = ds.data[rows:].copy()
+    dep_col = 1                                 # airline FD: distance -> elapsed
+    rects = knn_rect_queries(base, n_queries, PCFG.knn_k,
+                             seed=PCFG.seed, sample_cap=100_000)
+    result = {"dataset": "airline", "rows": rows, "n_queries": int(n_queries),
+              "batch": batch, "insert_rows_per_op": 32, "ratios": {}}
+
+    for ratio in insert_ratios:
+        idx = COAXIndex(base)
+        srv = QueryServer(idx, max_batch=batch)
+        rng = np.random.default_rng(PCFG.seed + int(ratio * 1000))
+        pool_pos, n_ins_batches = 0, 0
+        writes_per_wave = ratio / max(1.0 - ratio, 1e-9)
+        owed = 0.0
+        t0 = time.perf_counter()
+        for start in range(0, len(rects), batch):
+            wave = rects[start:start + batch]
+            owed += writes_per_wave * len(wave)
+            while owed >= 1.0:
+                owed -= 1.0
+                if n_ins_batches % 3 == 2:      # 1 delete per 2 inserts
+                    srv.delete(rng.integers(0, rows, 16))
+                else:
+                    rows_in = pool[pool_pos:pool_pos + 32].copy()
+                    pool_pos = (pool_pos + 32) % max(len(pool) - 32, 1)
+                    if n_ins_batches % 8 == 6:  # FD-violating burst
+                        rows_in[:, dep_col] = rows_in[:, dep_col] * 3.0 + 500.0
+                    srv.insert(rows_in)
+                n_ins_batches += 1
+            for r in wave:
+                srv.submit(r)
+            srv.drain()
+        dt = time.perf_counter() - t0
+        s = srv.stats()
+        entry = {
+            "qps": len(rects) / dt,
+            "writes_per_s": s["writes_applied"] / dt,
+            "rows_inserted": s["rows_inserted"],
+            "rows_deleted": s["rows_deleted"],
+            "epoch": s["epoch"],
+            "compactions": s["compactions"],
+            "final_delta_rows": s["delta_rows"],
+            "final_tombstones": s["tombstones"],
+        }
+        result["ratios"][str(ratio)] = entry
+        emit(f"mixed/airline/qps@r{ratio}", entry["qps"],
+             f"writes/s={entry['writes_per_s']:.1f},"
+             f"inserted={entry['rows_inserted']},deleted={entry['rows_deleted']},"
+             f"epoch={entry['epoch']},compactions={entry['compactions']}")
+
+        if smoke:
+            # rebuild-from-scratch oracle: a fresh index over the final live
+            # row set must agree bit-for-bit with the mutated index
+            live, ids = idx.live_rows()
+            oracle = COAXIndex(live, row_ids=ids)
+            got = idx.query_batch_split(np.asarray(rects))
+            want = oracle.query_batch_split(np.asarray(rects))
+            assert all(np.array_equal(g, w) for g, w in zip(got, want)), \
+                f"mixed-wave hits disagree with scratch oracle at r={ratio}"
+            from repro.engine import device_available
+            if device_available():
+                idx.backend = "device"
+                got_d = idx.query_batch_split(np.asarray(rects))
+                idx.backend = "numpy"
+                assert all(np.array_equal(g, w) for g, w in zip(got_d, want)), \
+                    f"device mixed-wave hits disagree with oracle at r={ratio}"
+            assert s["writes_applied"] > 0 and s["rows_inserted"] > 0
+            emit(f"mixed/airline/smoke@r{ratio}", 1.0,
+                 f"oracle agreement ok ({len(rects)} rects)")
+
+    out = Path(out_path) if out_path else \
+        Path(__file__).resolve().parents[1] / "BENCH_updates.json"
+    out.write_text(json.dumps(result, indent=2) + "\n")
+    print(f"BENCH {json.dumps(result)}")
+    return result
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--batch", action="store_true",
                     help="throughput mode: QPS vs batch size + BENCH_queries.json")
+    ap.add_argument("--mixed", action="store_true",
+                    help="read/write mode: insert-ratio sweep + BENCH_updates.json")
     ap.add_argument("--backend", choices=("numpy", "device", "both"),
                     default="both", help="which query_batch backend(s) to sweep")
     ap.add_argument("--smoke", action="store_true",
@@ -187,7 +293,11 @@ if __name__ == "__main__":
     ap.add_argument("--rows", type=int, default=None)
     ap.add_argument("--queries", type=int, default=None)
     args = ap.parse_args()
-    if args.batch:
+    if args.mixed:
+        run_mixed(rows=args.rows or 50_000,
+                  n_queries=args.queries or (128 if args.smoke else 192),
+                  smoke=args.smoke)
+    elif args.batch:
         run_batch(rows=args.rows or 100_000,
                   n_queries=args.queries or (64 if args.smoke else 256),
                   backend=args.backend, smoke=args.smoke)

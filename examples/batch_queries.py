@@ -1,10 +1,12 @@
-"""Batched query engine quickstart (DESIGN.md §2).
+"""Batched query engine quickstart (DESIGN.md §2, §5).
 
     PYTHONPATH=src python examples/batch_queries.py
 
 Builds a COAX index over airline-like data, submits a mixed-priority range
 query stream to the QueryServer, drains it in fused waves, and compares
-engine throughput against the per-query loop.
+engine throughput against the per-query loop.  Then goes live: inserts and
+deletes are admitted next to queries (applied at wave boundaries), answered
+from the delta plane, and folded back in by a compaction.
 """
 import sys
 import time
@@ -47,6 +49,23 @@ def main():
     total_hits = sum(r.size for r in results.values())
     print(f"total hits {total_hits}, index directory "
           f"{idx.memory_footprint()/1024:.1f} KiB")
+
+    # --- the write path (DESIGN.md §5) -------------------------------- #
+    fresh = make_airline(2_000, seed=7).data
+    w_ins = srv.insert(fresh)                       # queued ...
+    w_del = srv.delete(rng.choice(100_000, 500, replace=False))
+    qid = srv.submit(rects[0])
+    res = srv.drain()                               # ... applied at the wave
+    new_ids = srv.write_results[w_ins]
+    print(f"inserted {new_ids.size} rows / deleted {srv.write_results[w_del]}; "
+          f"delta={idx.delta_rows} tombstones={idx.tombstone_count} "
+          f"epoch={idx.epoch}")
+    assert np.array_equal(res[qid], idx.query(rects[0]))
+    idx.compact()
+    print(f"compacted -> epoch {idx.epoch}, {idx.n_rows} live rows, "
+          f"delta={idx.delta_rows}, drift predictability "
+          f"{idx.drift_predictability():.3f}")
+    assert np.array_equal(res[qid], idx.query(rects[0]))  # answers survive
 
 
 if __name__ == "__main__":

@@ -32,6 +32,7 @@ from .translate import (reduced_dims, translate_dependent_interval,
                         translate_rect, translate_rects)
 from .gridfile import (BatchStats, GridFile, batched_searchsorted,
                        fit_cells_per_dim, gather_ranges)
+from .delta import DeltaPlane
 from .baselines import ColumnFiles, FullScan, STRTree, UniformGrid
 from .coax import COAXIndex, CoaxConfig
 from . import theory
@@ -59,6 +60,7 @@ __all__ = [
     "translate_dependent_interval",
     "reduced_dims",
     "GridFile",
+    "DeltaPlane",
     "BatchStats",
     "gather_ranges",
     "batched_searchsorted",

@@ -15,16 +15,30 @@ Query path (``COAXIndex.query``):
   translated nav-rect plus the ORIGINAL full predicate, probe the outlier
   index with the original rect, union row ids.  §8.2.3's optimisation is
   applied: each sub-index is only invoked when the query can intersect it.
+
+Write path (DESIGN.md §5): the two grid files are *epoch-versioned frozen
+snapshots*; ``insert``/``delete`` land in per-sub-index ``DeltaPlane``s
+(append log + tombstones, scanned exactly per query) and every query unions
+(snapshot − tombstones) ∪ delta.  Inserts are margin-checked against the
+learned FD groups — in-margin rows feed the primary delta, violators the
+outlier delta — and stream into per-model ``BayesianLinearModel`` trackers
+so FD drift is measured from live sufficient statistics (§5: 'continuously
+adjust our existing model').  ``compact()`` merges deltas into rebuilt
+snapshots and bumps the epoch; it fires automatically on delta size, or on
+drift when the §7.2 predictability ratio (``theory.met_drifted_expectation``)
+says the frozen slopes have decayed.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from . import theory
+from .delta import DeltaPlane
 from .gridfile import BatchStats, GridFile, fit_cells_per_dim
-from .softfd import SoftFDConfig, learn_soft_fds
+from .softfd import BayesianLinearModel, SoftFDConfig, learn_soft_fds
 from .translate import reduced_dims, translate_rect, translate_rects
 from .types import FDGroup, Rect, full_rect, rect_contains, split_hits
 
@@ -41,6 +55,15 @@ class CoaxConfig:
                                                   # spot lever, paper Fig. 8)
     directory_budget_frac: float = 1.0            # directory <= frac * data bytes
 
+    # --- mutable lifecycle (DESIGN.md §5) ------------------------------- #
+    auto_compact: bool = True        # insert/delete check triggers themselves
+    compact_delta_frac: float = 0.25  # size trigger: delta load > frac * base
+    compact_min_delta: int = 1024     # ... and at least this many delta entries
+    drift_threshold: float = 0.5      # compact+relearn when the §7.2
+                                      # predictability ratio drops below this
+    drift_min_delta: int = 256        # drift trigger needs this much fresh data
+    drift_seed_rows: int = 4096       # rows seeding the live FD trackers
+
 
 class COAXIndex:
     name = "coax"
@@ -48,17 +71,30 @@ class COAXIndex:
     def __init__(self, data: np.ndarray, config: CoaxConfig = CoaxConfig(),
                  groups: Optional[Sequence[FDGroup]] = None,
                  backend: str = "numpy",
-                 device_opts: Optional[dict] = None):
+                 device_opts: Optional[dict] = None,
+                 row_ids: Optional[np.ndarray] = None):
         """Build the index.  ``groups`` may be supplied to skip detection
         (e.g. when the DBA already knows the FDs, or from a previous fit).
 
         ``backend="device"`` routes ``query_batch`` through the frozen
         device plans of both sub-grids (DESIGN.md §4); numpy stays the
         default and the correctness oracle.
+
+        ``row_ids`` assigns the original identities of ``data`` rows
+        (defaults to ``arange(N)``); a scratch rebuild of a mutated index
+        passes the surviving ids here so result sets stay comparable.
         """
         self.config = config
         self.data = np.ascontiguousarray(data, dtype=np.float32)
-        self.n_rows, self.n_dims = self.data.shape
+        self.n_dims = self.data.shape[1]
+        self.row_ids = (np.arange(self.data.shape[0], dtype=np.int64)
+                        if row_ids is None
+                        else np.asarray(row_ids, dtype=np.int64).copy())
+        if self.row_ids.shape[0] != self.data.shape[0]:
+            raise ValueError("row_ids length must match data rows")
+        self._next_id = int(self.row_ids.max()) + 1 if self.row_ids.size else 0
+        self.epoch = 0
+        self.compactions = 0
         self.groups: List[FDGroup] = (
             list(groups) if groups is not None else learn_soft_fds(self.data, config.softfd)
         )
@@ -78,29 +114,47 @@ class COAXIndex:
         self.primary.backend = value
         self.outlier.backend = value
 
+    @property
+    def n_rows(self) -> int:
+        """LIVE row count: snapshot rows − tombstones + live delta rows."""
+        return (self.data.shape[0]
+                - self.delta_primary.n_base_dead - self.delta_outlier.n_base_dead
+                + self.delta_primary.n_live + self.delta_outlier.n_live)
+
+    @property
+    def delta_rows(self) -> int:
+        """Live (not yet compacted) inserted rows across both delta planes."""
+        return self.delta_primary.n_live + self.delta_outlier.n_live
+
+    @property
+    def tombstone_count(self) -> int:
+        return self.delta_primary.n_tombstones + self.delta_outlier.n_tombstones
+
     # ------------------------------------------------------------------ #
     def _fit(self) -> None:
         cfg = self.config
+        n = self.data.shape[0]
         # Split into primary (all groups' margins hold) and outliers.
-        inlier = np.ones(self.n_rows, dtype=bool)
+        inlier = np.ones(n, dtype=bool)
         for g in self.groups:
             inlier &= g.inlier_mask(self.data)
-        self.primary_ratio = float(inlier.mean()) if self.n_rows else 0.0
+        self.primary_ratio = float(inlier.mean()) if n else 0.0
 
-        ids = np.arange(self.n_rows, dtype=np.int64)
-        p_rows, p_ids = self.data[inlier], ids[inlier]
-        o_rows, o_ids = self.data[~inlier], ids[~inlier]
+        p_rows, p_ids = self.data[inlier], self.row_ids[inlier]
+        o_rows, o_ids = self.data[~inlier], self.row_ids[~inlier]
 
         # Sorted dim: the kept dim with the widest normalised spread by
         # default — maximises the benefit of in-cell binary search.
         if cfg.sort_dim is not None:
             sort_dim = cfg.sort_dim
-        else:
+        elif n:
             spread = [
                 float(np.std(self.data[:, d])) / (float(np.ptp(self.data[:, d])) or 1.0)
                 for d in self.keep_dims
             ]
             sort_dim = self.keep_dims[int(np.argmax(spread))] if self.keep_dims else 0
+        else:
+            sort_dim = self.keep_dims[0] if self.keep_dims else 0
 
         budget_cells = max(int(self.data.nbytes * cfg.directory_budget_frac) // 8, 1)
         n_grid = max(len(self.keep_dims) - 1, 0)
@@ -111,7 +165,7 @@ class COAXIndex:
         self.primary = GridFile(
             p_rows, index_dims=self.keep_dims, cells_per_dim=p_cells,
             sort_dim=sort_dim if self.keep_dims else None, quantile=True, row_ids=p_ids,
-            device_opts=self._device_opts,
+            device_opts=self._device_opts, epoch=self.epoch,
         )
 
         # Outlier index: full-dimensional quantile grid with its own (much
@@ -124,7 +178,7 @@ class COAXIndex:
         self.outlier = GridFile(
             o_rows, index_dims=list(range(self.n_dims)), cells_per_dim=o_cells,
             sort_dim=sort_dim, quantile=True, row_ids=o_ids,
-            device_opts=self._device_opts,
+            device_opts=self._device_opts, epoch=self.epoch,
         )
 
         # Bounding box of outliers lets us skip the outlier probe entirely
@@ -134,6 +188,192 @@ class COAXIndex:
             self._outlier_hi = o_rows.max(axis=0)
         else:
             self._outlier_lo = None
+            self._outlier_hi = None
+
+        # Mutable plane of THIS epoch: sorted base id partitions (delete
+        # classification), empty delta planes, reseeded FD drift trackers.
+        self._base_primary_ids = np.sort(p_ids)
+        self._base_outlier_ids = np.sort(o_ids)
+        self.delta_primary = DeltaPlane(self.n_dims)
+        self.delta_outlier = DeltaPlane(self.n_dims)
+        self._seed_trackers(p_rows)
+
+    def _seed_trackers(self, inlier_rows: np.ndarray) -> None:
+        """Per-(group, dependent) live Bayesian models, seeded from a sample
+        of the snapshot's IN-MARGIN rows so the posterior slope starts at the
+        frozen trend (outlier mass would bias the seed away from the robust
+        fit and fake drift at epoch start)."""
+        cfg = self.config
+        n = inlier_rows.shape[0]
+        rng = np.random.default_rng(cfg.softfd.seed + 2)
+        take = (rng.choice(n, size=min(cfg.drift_seed_rows, n), replace=False)
+                if n else np.empty(0, np.int64))
+        sample = inlier_rows[take].astype(np.float64)
+        self._fd_trackers: Dict[Tuple[int, int], BayesianLinearModel] = {}
+        self._x_scale: Dict[int, float] = {}
+        for gi, g in enumerate(self.groups):
+            x = sample[:, g.predictor] if sample.size else np.empty(0)
+            self._x_scale[gi] = float(np.std(x)) if x.size else 1.0
+            for dep in g.dependents:
+                blm = BayesianLinearModel.empty(cfg.softfd.ridge_lambda)
+                if x.size:
+                    blm.update(x, sample[:, dep])
+                self._fd_trackers[(gi, dep)] = blm
+
+    # ------------------------------------------------------------------ #
+    # Write path (DESIGN.md §5)
+    # ------------------------------------------------------------------ #
+    def insert(self, rows: np.ndarray) -> np.ndarray:
+        """Insert rows; returns their assigned original row ids.
+
+        Each row is margin-checked against every learned FD group: rows
+        satisfying all margins land in the primary delta, violators in the
+        outlier delta (the write-time mirror of the build-time split).  All
+        inserts stream into the live ``BayesianLinearModel`` trackers so
+        ``drift_predictability`` reflects the data actually arriving.
+        """
+        rows = np.ascontiguousarray(np.atleast_2d(np.asarray(rows, dtype=np.float32)))
+        if rows.ndim != 2 or rows.shape[1] != self.n_dims:
+            raise ValueError(f"rows must be (m, {self.n_dims}), got {rows.shape}")
+        m = rows.shape[0]
+        ids = np.arange(self._next_id, self._next_id + m, dtype=np.int64)
+        self._next_id += m
+        if m == 0:
+            return ids
+        inlier = np.ones(m, dtype=bool)
+        for g in self.groups:
+            inlier &= g.inlier_mask(rows)
+        self.delta_primary.insert(rows[inlier], ids[inlier])
+        self.delta_outlier.insert(rows[~inlier], ids[~inlier])
+        x64 = rows.astype(np.float64)
+        for (gi, dep), blm in self._fd_trackers.items():
+            g = self.groups[gi]
+            blm.update(x64[:, g.predictor], x64[:, dep])
+        if self.config.auto_compact:
+            self.maybe_compact()
+        return ids
+
+    def delete(self, row_ids) -> int:
+        """Delete rows by original id; returns how many live rows died.
+
+        Ids living in a delta log are tombstoned there; ids frozen into the
+        snapshot are classified primary/outlier and tombstoned in the
+        matching plane (so each sub-index's hits are masked by exactly its
+        own plane).  Unknown or already-dead ids are ignored.
+        """
+        ids = np.unique(np.asarray(row_ids, dtype=np.int64).reshape(-1))
+        if ids.size == 0:
+            return 0
+        removed = 0
+        absorbed = self.delta_primary.tombstone_log(ids)
+        removed += int(absorbed.sum())
+        ids = ids[~absorbed]
+        absorbed = self.delta_outlier.tombstone_log(ids)
+        removed += int(absorbed.sum())
+        ids = ids[~absorbed]
+        in_p = np.isin(ids, self._base_primary_ids)
+        removed += self.delta_primary.tombstone_base(ids[in_p])
+        rest = ids[~in_p]
+        in_o = np.isin(rest, self._base_outlier_ids)
+        removed += self.delta_outlier.tombstone_base(rest[in_o])
+        if self.config.auto_compact:
+            self.maybe_compact()
+        return removed
+
+    # ------------------------------------------------------------------ #
+    def drift_predictability(self) -> float:
+        """§7.2 predictability of the frozen models against live statistics.
+
+        For each (group, dependent) model, the live posterior slope's
+        mismatch ``d = |m_live − m_frozen| · std(x)`` is scored with the
+        drifted mean-exit-time ratio
+        ``met_drifted_expectation(ε, σ, d) / met_expectation(ε, σ)``
+        (= tanh(u)/u, u = εd/σ²) with ε = half the margin width and the
+        σ = ε/2 convention; 1.0 = no drift, →0 as the frozen slope decays.
+        Returns the minimum over all models (the weakest link triggers the
+        relearn), or 1.0 when no FDs are tracked.
+        """
+        worst = 1.0
+        for (gi, dep), blm in self._fd_trackers.items():
+            model = self.groups[gi].models[dep]
+            eps = model.width / 2.0
+            if eps <= 0.0:
+                continue
+            m_live, _ = blm.posterior_mean()
+            d = abs(m_live - model.m) * self._x_scale[gi]
+            sigma = eps / 2.0
+            ratio = (theory.met_drifted_expectation(eps, sigma, d)
+                     / theory.met_expectation(eps, sigma))
+            worst = min(worst, float(ratio))
+        return worst
+
+    def maybe_compact(self) -> bool:
+        """Fire ``compact()`` when a trigger holds (DESIGN.md §5):
+
+        * size — delta load (live inserts + tombstones) exceeds both
+          ``compact_min_delta`` and ``compact_delta_frac`` of the snapshot;
+        * drift — predictability fell below ``drift_threshold`` with at
+          least ``drift_min_delta`` of fresh delta evidence (the relearn
+          path: compaction re-runs ``learn_soft_fds``).
+        """
+        cfg = self.config
+        load = self.delta_rows + self.tombstone_count
+        size_trigger = load >= max(cfg.compact_min_delta,
+                                   int(cfg.compact_delta_frac * max(self.data.shape[0], 1)))
+        drift_trigger = (load >= cfg.drift_min_delta
+                         and self.drift_predictability() < cfg.drift_threshold)
+        if size_trigger or drift_trigger:
+            self.compact(relearn=drift_trigger or None)
+            return True
+        return False
+
+    def live_rows(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(rows, ids) of every live row: snapshot survivors + delta logs —
+        the compaction feed, and the scratch-rebuild oracle's input."""
+        dead = self._dead_ids()
+        if dead.size:
+            keep = ~np.isin(self.row_ids, dead)
+            rows, ids = self.data[keep], self.row_ids[keep]
+        else:
+            rows, ids = self.data, self.row_ids
+        dp_rows, dp_ids = self.delta_primary.live_log()
+        do_rows, do_ids = self.delta_outlier.live_log()
+        if dp_ids.size or do_ids.size:
+            rows = np.concatenate([rows, dp_rows, do_rows])
+            ids = np.concatenate([ids, dp_ids, do_ids])
+        return rows, ids
+
+    def compact(self, relearn: Optional[bool] = None) -> dict:
+        """Merge the delta planes into rebuilt snapshot grids.
+
+        Materialises the live row set, optionally re-runs ``learn_soft_fds``
+        (``relearn=None`` relearns iff the drift gate says the frozen models
+        decayed), refits both grid files, resets the delta planes, and bumps
+        the epoch — which is what invalidates any frozen ``DevicePlan``:
+        the rebuilt ``GridFile``s carry the new epoch and lazily build fresh
+        plans on first device use (DESIGN.md §5 invalidation contract).
+        """
+        if relearn is None:
+            relearn = self.drift_predictability() < self.config.drift_threshold
+        rows, ids = self.live_rows()
+        bk = self.backend
+        self.data = np.ascontiguousarray(rows, dtype=np.float32)
+        self.row_ids = np.asarray(ids, dtype=np.int64)
+        relearned = bool(relearn) and self.data.shape[0] >= 64
+        if relearned:
+            self.groups = learn_soft_fds(self.data, self.config.softfd)
+            self.keep_dims = reduced_dims(self.n_dims, self.groups)
+        self.epoch += 1
+        self.compactions += 1
+        self._fit()
+        self.backend = bk
+        return {"epoch": self.epoch, "rows": int(self.data.shape[0]),
+                "relearned": relearned}
+
+    def _dead_ids(self) -> np.ndarray:
+        """Tombstoned ids across both planes (for masking snapshot hits)."""
+        return np.concatenate([self.delta_primary.dead_ids(),
+                               self.delta_outlier.dead_ids()])
 
     # ------------------------------------------------------------------ #
     def translate(self, rect: Rect) -> np.ndarray:
@@ -151,6 +391,13 @@ class COAXIndex:
             o_nav = rect.copy()
             hits.append(self.outlier.query(o_nav, rect))
         out = np.concatenate(hits) if len(hits) > 1 else hits[0]
+        dead = self._dead_ids()
+        if dead.size and out.size:
+            out = out[~np.isin(out, dead)]
+        d1 = self.delta_primary.scan(rect)
+        d2 = self.delta_outlier.scan(rect)
+        if d1.size or d2.size:
+            out = np.concatenate([out, d1, d2])
         return np.sort(out)
 
     # ------------------------------------------------------------------ #
@@ -167,6 +414,12 @@ class COAXIndex:
         probe and one outlier probe are shared by the whole batch; the
         §8.2.3 outlier skip is a vectorised bbox test that sub-batches the
         outlier probe to only the queries that can touch it.
+
+        Snapshot hits (from whichever backend served them, numpy or device)
+        are masked by the tombstone set and unioned with one exact numpy
+        delta scan per plane — the same host arithmetic for every backend,
+        so cross-backend results stay bit-identical while the device keeps
+        serving the frozen epoch (DESIGN.md §5).
         """
         rects = np.asarray(rects, dtype=np.float64)
         b = rects.shape[0]
@@ -194,6 +447,19 @@ class COAXIndex:
                     r_p = np.concatenate([r_p, r_o])
                     order = np.lexsort((r_p, q_p))     # merge the two hit lists
                     q_p, r_p = q_p[order], r_p[order]
+
+        dead = self._dead_ids()
+        if dead.size and r_p.size:
+            keep = ~np.isin(r_p, dead)
+            q_p, r_p = q_p[keep], r_p[keep]
+        q_d1, r_d1 = self.delta_primary.scan_batch(rects)
+        q_d2, r_d2 = self.delta_outlier.scan_batch(rects)
+        if r_d1.size or r_d2.size:
+            q_p = np.concatenate([q_p, q_d1, q_d2])
+            r_p = np.concatenate([r_p, r_d1, r_d2])
+            order = np.lexsort((r_p, q_p))
+            q_p, r_p = q_p[order], r_p[order]
+        stats.rows_scanned += b * self.delta_rows      # exact per-query scans
         self.last_batch_stats = stats
         return q_p, r_p
 
@@ -205,13 +471,21 @@ class COAXIndex:
 
     # ------------------------------------------------------------------ #
     def memory_footprint(self) -> int:
-        """Directory bytes: both grids + the soft-FD model parameters."""
+        """Bytes actually held beyond the snapshot payload: both grid
+        directories, the soft-FD model parameters, the live drift trackers,
+        the §8.2.3 outlier bbox arrays, and the delta structures."""
         model_bytes = sum(len(g.dependents) * 4 * 8 + 8 for g in self.groups)
-        return self.primary.memory_footprint() + self.outlier.memory_footprint() + model_bytes
+        tracker_bytes = len(self._fd_trackers) * 7 * 8     # xtx(4)+xty(2)+lam
+        bbox_bytes = (self._outlier_lo.nbytes + self._outlier_hi.nbytes
+                      if self._outlier_lo is not None else 0)
+        delta_bytes = self.delta_primary.nbytes() + self.delta_outlier.nbytes()
+        return (self.primary.memory_footprint() + self.outlier.memory_footprint()
+                + model_bytes + tracker_bytes + bbox_bytes + delta_bytes)
 
     def describe(self) -> dict:
         return {
             "n_rows": self.n_rows,
+            "base_rows": int(self.data.shape[0]),
             "n_dims": self.n_dims,
             "groups": [
                 {
@@ -229,5 +503,13 @@ class COAXIndex:
             "primary_ratio": self.primary_ratio,
             "primary_cells": self.primary.n_cells,
             "outlier_cells": self.outlier.n_cells,
+            "epoch": self.epoch,
+            "compactions": self.compactions,
+            "delta_primary": self.delta_primary.describe(),
+            "delta_outlier": self.delta_outlier.describe(),
+            "tombstones": self.tombstone_count,
+            "drift_predictability": self.drift_predictability(),
+            "outlier_bbox_bytes": (self._outlier_lo.nbytes + self._outlier_hi.nbytes
+                                   if self._outlier_lo is not None else 0),
             "memory_footprint_bytes": self.memory_footprint(),
         }

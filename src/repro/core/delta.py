@@ -1,0 +1,207 @@
+"""Delta plane: the write path of the mutable index lifecycle (DESIGN.md §5).
+
+A ``DeltaPlane`` is the mutable companion of one frozen sub-index snapshot
+(a ``GridFile`` epoch): an append-only log of inserted rows plus a tombstone
+set for deletes.  The log is scanned *exactly* per query — every query's
+full predicate is evaluated against every live log row — so correctness
+never depends on any learned structure; the plane only has to stay small,
+which is the compaction trigger's job (``COAXIndex.compact``).
+
+Tombstones cover two id populations with one mechanism:
+
+* *base* ids — rows frozen into the snapshot this plane shadows; the
+  snapshot keeps returning them, so query paths mask them out with
+  ``is_dead``;
+* *log* ids — rows inserted after the snapshot; ``scan``/``scan_batch``
+  exclude them at the source.  The log itself is never rewritten (append
+  only); space is reclaimed at compaction, when live log rows merge into
+  the next snapshot epoch and the plane resets empty.
+
+Exactness argument (delta ∪ snapshot; DESIGN.md §5): scans compare the
+float32 log rows against the float64 rect with numpy's usual upcast —
+mathematically ``lo <= v < hi`` on the exact f32 value, the same membership
+test the frozen numpy/device paths implement (``f32_ceil`` rounding is
+provably equivalent, see ``gridfile.f32_ceil``).  A row therefore hits in
+the delta iff it would hit after being compacted into a snapshot, and the
+union  (snapshot hits − tombstones) ∪ (live log hits)  equals a scratch
+rebuild from the final row set, bit for bit, on every backend.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from .types import Rect, rect_contains
+
+__all__ = ["DeltaPlane"]
+
+
+class DeltaPlane:
+    """Append log of inserted rows + tombstone set for one sub-index.
+
+    Parameters
+    ----------
+    n_dims : attribute count of the table (log rows are (M, n_dims) f32).
+    """
+
+    def __init__(self, n_dims: int):
+        self.n_dims = int(n_dims)
+        self._chunks: List[np.ndarray] = []      # appended (m, D) f32 blocks
+        self._id_chunks: List[np.ndarray] = []   # appended (m,) i64 blocks
+        self._dead: set = set()                  # tombstoned ids (log or base)
+        self.n_log = 0                           # rows ever appended
+        self.n_log_dead = 0                      # log rows later tombstoned
+        self.n_base_dead = 0                     # snapshot rows tombstoned
+        self._rows_cache: Optional[np.ndarray] = None
+        self._ids_cache: Optional[np.ndarray] = None
+        self._live_cache: Optional[Tuple[np.ndarray, np.ndarray]] = None
+        self._live64_cache: Optional[np.ndarray] = None
+        self._dead_cache: Optional[np.ndarray] = None
+
+    # ------------------------------------------------------------------ #
+    @property
+    def n_live(self) -> int:
+        """Live (non-tombstoned) log rows."""
+        return self.n_log - self.n_log_dead
+
+    @property
+    def n_tombstones(self) -> int:
+        """All tombstones this plane holds (log + base)."""
+        return self.n_log_dead + self.n_base_dead
+
+    def __len__(self) -> int:
+        return self.n_live
+
+    # ------------------------------------------------------------------ #
+    def insert(self, rows: np.ndarray, ids: np.ndarray) -> None:
+        """Append rows with their (new, never-seen) original ids."""
+        rows = np.ascontiguousarray(rows, dtype=np.float32)
+        ids = np.asarray(ids, dtype=np.int64)
+        if rows.ndim != 2 or rows.shape[1] != self.n_dims:
+            raise ValueError(f"rows must be (m, {self.n_dims}), got {rows.shape}")
+        if rows.shape[0] != ids.shape[0]:
+            raise ValueError("rows/ids length mismatch")
+        if rows.shape[0] == 0:
+            return
+        self._chunks.append(rows)
+        self._id_chunks.append(ids)
+        self.n_log += rows.shape[0]
+        self._rows_cache = self._ids_cache = None
+        self._live_cache = self._live64_cache = None
+
+    def log_ids(self) -> np.ndarray:
+        """All ids ever appended (dead included), in append order."""
+        if self._ids_cache is None:
+            self._ids_cache = (np.concatenate(self._id_chunks)
+                               if self._id_chunks else np.empty(0, np.int64))
+        return self._ids_cache
+
+    def _log_rows(self) -> np.ndarray:
+        if self._rows_cache is None:
+            self._rows_cache = (np.concatenate(self._chunks)
+                                if self._chunks else
+                                np.empty((0, self.n_dims), np.float32))
+        return self._rows_cache
+
+    # ------------------------------------------------------------------ #
+    def tombstone_log(self, ids: np.ndarray) -> np.ndarray:
+        """Tombstone the subset of ``ids`` (UNIQUE ids — the
+        ``COAXIndex.delete`` contract) that are live rows of THIS log.
+
+        Returns the boolean mask of ids absorbed (callers route the rest to
+        base classification or to another plane).
+        """
+        ids = np.asarray(ids, dtype=np.int64)
+        if ids.size == 0 or self.n_log == 0:
+            return np.zeros(ids.shape, dtype=bool)
+        absorbed = np.isin(ids, self.log_ids())
+        if self._dead:
+            absorbed &= ~np.isin(ids, self.dead_ids())
+        n_fresh = int(absorbed.sum())
+        if n_fresh:
+            self._dead.update(ids[absorbed].tolist())
+            self.n_log_dead += n_fresh
+            self._live_cache = self._live64_cache = self._dead_cache = None
+        return absorbed
+
+    def tombstone_base(self, ids: np.ndarray) -> int:
+        """Tombstone snapshot ids (caller has verified they belong to this
+        plane's base partition).  Returns the count newly dead."""
+        ids = np.asarray(ids, dtype=np.int64)
+        fresh = set(ids.tolist()) - self._dead
+        self._dead |= fresh
+        self.n_base_dead += len(fresh)
+        if fresh:
+            self._dead_cache = None
+        return len(fresh)
+
+    def dead_ids(self) -> np.ndarray:
+        """Sorted array of every tombstoned id (log + base)."""
+        if self._dead_cache is None:
+            self._dead_cache = np.fromiter(
+                self._dead, dtype=np.int64, count=len(self._dead))
+            self._dead_cache.sort()
+        return self._dead_cache
+
+    def is_dead(self, ids: np.ndarray) -> np.ndarray:
+        ids = np.asarray(ids, dtype=np.int64)
+        if not self._dead:
+            return np.zeros(ids.shape, dtype=bool)
+        return np.isin(ids, self.dead_ids())
+
+    # ------------------------------------------------------------------ #
+    def live_log(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(rows, ids) of live log entries — the compaction feed."""
+        if self._live_cache is None:
+            rows, ids = self._log_rows(), self.log_ids()
+            if self.n_log_dead:
+                keep = ~self.is_dead(ids)
+                rows, ids = rows[keep], ids[keep]
+            self._live_cache = (rows, ids)
+        return self._live_cache
+
+    def scan(self, rect: Rect) -> np.ndarray:
+        """Exact scan: ids of live log rows inside ``rect`` (unsorted)."""
+        rows, ids = self.live_log()
+        if ids.size == 0:
+            return np.empty(0, np.int64)
+        return ids[rect_contains(np.asarray(rect, np.float64), rows)]
+
+    def scan_batch(self, rects: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Exact batched scan: flat (query_ids, row_ids) over live log rows.
+
+        One (B, M) boolean accumulator built one dimension at a time (the
+        same temporaries discipline as ``GridFile._query_batch_numpy``);
+        float64 compares against the f32 log rows are exact after upcast.
+        """
+        rects = np.asarray(rects, dtype=np.float64)
+        rows, ids = self.live_log()
+        b, m = rects.shape[0], ids.size
+        if b == 0 or m == 0:
+            return np.empty(0, np.int64), np.empty(0, np.int64)
+        hit = np.ones((b, m), dtype=bool)
+        if self._live64_cache is None:      # invalidated with _live_cache
+            self._live64_cache = rows.astype(np.float64)
+        rows64 = self._live64_cache
+        for j in range(self.n_dims):
+            v = rows64[:, j]
+            np.logical_and(hit, v[None, :] >= rects[:, j, 0][:, None], out=hit)
+            np.logical_and(hit, v[None, :] < rects[:, j, 1][:, None], out=hit)
+        qids, pos = np.nonzero(hit)
+        return qids.astype(np.int64), ids[pos]
+
+    # ------------------------------------------------------------------ #
+    def nbytes(self) -> int:
+        """Bytes actually held: log rows + log ids + tombstone ids."""
+        return (self.n_log * self.n_dims * 4      # f32 rows
+                + self.n_log * 8                  # i64 ids
+                + len(self._dead) * 8)            # i64 tombstones
+
+    def describe(self) -> dict:
+        return {
+            "log_rows": self.n_log,
+            "live_rows": self.n_live,
+            "tombstones": self.n_tombstones,
+            "bytes": self.nbytes(),
+        }

@@ -174,6 +174,10 @@ class GridFile:
         wave's candidate cells overflow the plan's cap.
     device_opts : kwargs for ``engine.device.DevicePlan`` (cell_cap, tile,
         min_bucket, use_pallas, interpret).
+    epoch : snapshot version label (DESIGN.md §5).  A grid file is an
+        immutable snapshot of one epoch; the mutable lifecycle
+        (``COAXIndex.compact``) replaces it with a new-epoch instance, which
+        is what invalidates any frozen ``DevicePlan`` built from it.
     """
 
     def __init__(
@@ -186,8 +190,10 @@ class GridFile:
         row_ids: Optional[np.ndarray] = None,
         backend: str = "numpy",
         device_opts: Optional[dict] = None,
+        epoch: int = 0,
     ):
         data = np.ascontiguousarray(data, dtype=np.float32)
+        self.epoch = int(epoch)
         n, d_full = data.shape
         self.n_rows = n
         self.d_full = d_full

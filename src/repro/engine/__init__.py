@@ -1,13 +1,15 @@
-"""Batched query execution engine (DESIGN.md §2, §4).
+"""Batched query execution engine (DESIGN.md §2, §4, §5).
 
 The per-call path (``COAXIndex.query``) answers one rect per Python
 round-trip; this package turns B queries into one translation pass, one
 directory probe and one fused scan, and wraps that in an admission/drain
 server modelled on ``runtime.router``'s continuous-batching loop — the same
 pattern, applied to range-query traffic instead of decode requests.
+Under the mutable lifecycle (§5) the server also admits inserts/deletes,
+flushed at wave boundaries so every wave sees one snapshot+delta state.
 
 ``BatchQueryExecutor`` — wave-sliced ``query_batch`` driver with per-wave stats
-``QueryServer``        — submit rects, drain in priority/FIFO waves
+``QueryServer``        — submit rects/writes, drain in priority/FIFO waves
 ``DevicePlan``         — frozen device-resident serving plane (§4); imported
                          lazily so the numpy engine works without jax
 """

@@ -43,6 +43,15 @@ nav-rect over-approximates the filter-rect on the indexed dims — which is
 exactly the COAX invariant (§7.1 translation for the primary index,
 nav == filter for the outlier/raw grid).  ``GridFile.query_batch`` only
 routes here under that contract.
+
+Epoch versioning (DESIGN.md §5): a plan is the frozen image of ONE grid
+file epoch (``DevicePlan.epoch``).  Under the mutable lifecycle the plan
+keeps serving that frozen epoch while ``COAXIndex`` unions an exact numpy
+delta scan and masks tombstones on the host — identical arithmetic for
+every backend, so results stay bit-identical to numpy while writes accrue.
+Compaction replaces the grid file with a new-epoch instance, which is the
+only event that invalidates a plan: the stale plan is dropped with its
+grid and a fresh one is built lazily on the next device wave.
 """
 from __future__ import annotations
 
@@ -210,6 +219,7 @@ class DevicePlan:
         if not _HAVE_JAX:
             raise ImportError("jax is required for the device backend")
         self.grid = grid
+        self.epoch = int(getattr(grid, "epoch", 0))   # snapshot version (§5)
         self.cell_cap = int(cell_cap)
         self.tile = int(tile)
         self.min_bucket = int(min_bucket)

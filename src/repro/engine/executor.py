@@ -10,7 +10,10 @@ stage (``last_batch_stats``), so backend comparisons report work done, not
 just wall-clock throughput.
 
 ``backend="device"`` routes waves through the index's device-resident plan
-(DESIGN.md §4); numpy stays the default and the correctness oracle.
+(DESIGN.md §4); numpy stays the default and the correctness oracle.  Under
+the mutable lifecycle (DESIGN.md §5) the index may compact between waves —
+the executor re-validates ``index.backend`` per wave and stamps each
+``WaveStats`` with the epoch/delta/tombstone state it was served from.
 Indexes without a ``query_batch`` (e.g. the §8.1.3 baselines) degrade to a
 per-rect loop inside the same interface, which is also what the benchmark's
 ``--batch`` mode compares against.
@@ -38,6 +41,9 @@ class WaveStats:
     cells_probed: int = 0        # candidate (query, cell) pairs enumerated
     backend: str = "numpy"       # backend that answered this wave
     fallbacks: int = 0           # device waves re-answered by numpy (§4)
+    epoch: int = 0               # snapshot epoch the wave was served from (§5)
+    delta_rows: int = 0          # live delta-log rows unioned into the wave
+    tombstones: int = 0          # tombstoned ids masked out of the wave
 
     @property
     def qps(self) -> float:
@@ -66,13 +72,32 @@ class BatchQueryExecutor:
         self.max_batch = max_batch
         self.wave_stats: List[WaveStats] = []
         self._batched = hasattr(index, "query_batch")
+        self._requested_backend = backend
         if backend is not None:
             if hasattr(index, "backend"):
                 index.backend = backend
             elif backend != "numpy":
                 raise ValueError(
                     f"{type(index).__name__} has no device backend")
-        self.backend = backend or getattr(index, "backend", "numpy")
+
+    @property
+    def backend(self) -> str:
+        """The backend the next wave will be served from — re-read from the
+        index every time rather than cached at construction, so an index
+        compaction (epoch swap, DESIGN.md §5) or an external backend flip
+        mid-stream can never be reported (or served) stale."""
+        return self._requested_backend or getattr(self.index, "backend", "numpy")
+
+    def _revalidate_backend(self) -> None:
+        """Re-assert the requested backend on the index before a wave: if
+        anything reset it (compaction path, another executor sharing the
+        index), the wave would otherwise silently serve from the wrong
+        plane."""
+        if self._requested_backend is None:
+            return
+        cur = getattr(self.index, "backend", None)
+        if cur is not None and cur != self._requested_backend:
+            self.index.backend = self._requested_backend
 
     # ------------------------------------------------------------------ #
     def _run_wave(self, rects: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
@@ -91,6 +116,7 @@ class BatchQueryExecutor:
         out: List[np.ndarray] = []
         for start in range(0, n, self.max_batch):
             wave = rects[start:start + self.max_batch]
+            self._revalidate_backend()
             t0 = time.perf_counter()
             qids, rids = self._run_wave(wave)
             dt = time.perf_counter() - t0
@@ -102,7 +128,10 @@ class BatchQueryExecutor:
                 rows_scanned=bs.rows_scanned if bs else 0,
                 cells_probed=bs.cells_probed if bs else 0,
                 backend=bs.backend if bs else self.backend,
-                fallbacks=bs.fallbacks if bs else 0))
+                fallbacks=bs.fallbacks if bs else 0,
+                epoch=int(getattr(self.index, "epoch", 0)),
+                delta_rows=int(getattr(self.index, "delta_rows", 0)),
+                tombstones=int(getattr(self.index, "tombstone_count", 0))))
         return out
 
     # ------------------------------------------------------------------ #
@@ -120,6 +149,11 @@ class BatchQueryExecutor:
             "qps": total_q / total_s if total_s > 0 else 0.0,
             "batched": self._batched,
             "backend": self.backend,
+            "epochs": sorted({w.epoch for w in self.wave_stats}),
+            "delta_rows": self.wave_stats[-1].delta_rows if self.wave_stats
+                          else int(getattr(self.index, "delta_rows", 0)),
+            "tombstones": self.wave_stats[-1].tombstones if self.wave_stats
+                          else int(getattr(self.index, "tombstone_count", 0)),
         }
 
     def reset_stats(self) -> None:

@@ -1,4 +1,4 @@
-"""Range-query admission server (DESIGN.md §2).
+"""Range-query admission server (DESIGN.md §2, §5).
 
 Adapts ``runtime.router.CoaxRouter``'s continuous-batching admission pattern
 to range-query traffic: clients ``submit`` rects into a pending pool, the
@@ -6,13 +6,20 @@ server ``drain``s the pool in priority-then-FIFO waves of ``max_batch``
 queries, and each wave is one fused ``BatchQueryExecutor`` call.  Per-wave
 stats mirror the router's so the serving plane exposes one vocabulary
 (waves, pending, qps) whether it batches decode requests or index probes.
+
+Writes (DESIGN.md §5): ``insert``/``delete`` enqueue mutations next to the
+query pool; ``drain`` applies every queued write at each wave boundary
+(``flush_writes``) before forming the wave, so all queries fused into one
+wave answer against the same snapshot+delta state — per-wave snapshot
+semantics.  A query admitted before a write but drained after it observes
+the write; two queries in the same wave can never observe different states.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -30,7 +37,7 @@ class PendingQuery:
 
 
 class QueryServer:
-    """Submit range queries, drain them in batched waves.
+    """Submit range queries and writes, drain them in batched waves.
 
     Parameters
     ----------
@@ -47,7 +54,13 @@ class QueryServer:
             index, max_batch=max_batch, backend=backend)
         self._pending: Dict[int, PendingQuery] = {}
         self._ids = itertools.count()
+        self._write_queue: List[Tuple[int, str, object]] = []
+        self._write_ids = itertools.count()
+        self.write_results: Dict[int, object] = {}
         self.waves_drained = 0
+        self.writes_applied = 0
+        self.rows_inserted = 0
+        self.rows_deleted = 0
 
     # ------------------------------------------------------------------ #
     def submit(self, rect: np.ndarray, priority: float = 0.0,
@@ -68,18 +81,75 @@ class QueryServer:
     def submit_many(self, rects: np.ndarray, priority: float = 0.0) -> List[int]:
         return [self.submit(r, priority=priority) for r in rects]
 
+    def cancel(self, qid: int) -> bool:
+        """Remove a pending query before it is drained; True iff it was
+        still pending (False: unknown id, or already answered)."""
+        return self._pending.pop(qid, None) is not None
+
+    # ------------------------------------------------------------------ #
+    # Write admission (DESIGN.md §5)
+    # ------------------------------------------------------------------ #
+    def insert(self, rows: np.ndarray) -> int:
+        """Queue an insert; returns a write id.  The assigned row ids land
+        in ``write_results[write_id]`` once the write is applied (at the
+        next wave boundary, or an explicit ``flush_writes``)."""
+        index = self.executor.index
+        if not hasattr(index, "insert"):
+            raise TypeError(f"{type(index).__name__} does not support insert")
+        rows = np.atleast_2d(np.asarray(rows, dtype=np.float32))
+        n_dims = getattr(index, "n_dims", None)
+        if n_dims is not None and rows.shape[1] != n_dims:
+            raise ValueError(f"rows have {rows.shape[1]} dims, index has {n_dims}")
+        wid = next(self._write_ids)
+        self._write_queue.append((wid, "insert", rows))
+        return wid
+
+    def delete(self, row_ids) -> int:
+        """Queue a delete by original row ids; returns a write id.  The
+        count of rows actually removed lands in ``write_results``."""
+        index = self.executor.index
+        if not hasattr(index, "delete"):
+            raise TypeError(f"{type(index).__name__} does not support delete")
+        wid = next(self._write_ids)
+        self._write_queue.append(
+            (wid, "delete", np.asarray(row_ids, dtype=np.int64)))
+        return wid
+
+    def flush_writes(self) -> Dict[int, object]:
+        """Apply every queued write in admission order; returns the results
+        of the writes applied by THIS call ({write_id: ids | count})."""
+        applied: Dict[int, object] = {}
+        index = self.executor.index
+        while self._write_queue:
+            wid, kind, payload = self._write_queue.pop(0)
+            if kind == "insert":
+                res = index.insert(payload)
+                self.rows_inserted += int(np.asarray(res).size)
+            else:
+                res = index.delete(payload)
+                self.rows_deleted += int(res)
+            applied[wid] = res
+            self.writes_applied += 1
+        self.write_results.update(applied)
+        return applied
+
     # ------------------------------------------------------------------ #
     def drain(self, max_waves: Optional[int] = None) -> Dict[int, np.ndarray]:
         """Run pending queries to completion (or for ``max_waves`` waves).
 
         Returns {query_id: sorted row ids} for every query answered.  Wave
         formation is priority-then-FIFO, like the router's admission sort.
+        Queued writes are flushed at every wave boundary, so each wave
+        observes one consistent index state (per-wave snapshot semantics).
         """
         results: Dict[int, np.ndarray] = {}
         width = self.executor.max_batch
         waves_this_call = 0
-        while self._pending:
+        while self._pending or self._write_queue:
             if max_waves is not None and waves_this_call >= max_waves:
+                break
+            self.flush_writes()
+            if not self._pending:
                 break
             cands = sorted(self._pending.values(),
                            key=lambda q: (-q.priority, q.arrival, q.qid))
@@ -99,5 +169,17 @@ class QueryServer:
 
     def stats(self) -> dict:
         s = self.executor.stats()
-        s.update(pending=len(self._pending), waves_drained=self.waves_drained)
+        index = self.executor.index
+        s.update(
+            pending=len(self._pending),
+            waves_drained=self.waves_drained,
+            writes_pending=len(self._write_queue),
+            writes_applied=self.writes_applied,
+            rows_inserted=self.rows_inserted,
+            rows_deleted=self.rows_deleted,
+            epoch=int(getattr(index, "epoch", 0)),
+            compactions=int(getattr(index, "compactions", 0)),
+            delta_rows=int(getattr(index, "delta_rows", 0)),
+            tombstones=int(getattr(index, "tombstone_count", 0)),
+        )
         return s
