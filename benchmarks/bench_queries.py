@@ -15,9 +15,14 @@ section — asserting both backends return identical hits before timing.
 interleaving query waves with insert/delete admissions at a sweep of write
 ratios (FD-violating insert bursts included, so compaction and drift
 relearns fire), emitted to ``BENCH_updates.json``.
+``--shards K[,K...]`` sweeps the scatter-gather plane (DESIGN.md §6): a
+``ShardedCOAX`` per shard count, range-partitioned, served through the
+executor's sharded mode — per-K QPS, pruning rate and per-shard work merge
+into the ``sharded`` section of ``BENCH_queries.json``.
 ``--smoke`` shrinks the sweep and turns the throughput/agreement checks
 into hard assertions for CI — for ``--mixed`` the gate is hit agreement
-between the mutated index and a rebuild-from-scratch oracle.
+between the mutated index and a rebuild-from-scratch oracle, for
+``--shards`` it is cross-shard vs single-index hit agreement.
 """
 from __future__ import annotations
 
@@ -40,6 +45,15 @@ SWEEPS = {
     "column_files": [3, 4, 6, 8, 12],
     "r_tree": [6, 10, 16],
 }
+
+
+def _read_bench_json(path: Path) -> dict:
+    """Existing benchmark doc at ``path``, or {} (missing/corrupt) — so the
+    --batch and --shards modes can each preserve the other's sections."""
+    try:
+        return json.loads(path.read_text())
+    except (OSError, ValueError):
+        return {}
 
 
 def _build(name, data, knob):
@@ -177,7 +191,89 @@ def run_batch(rows: int = 100_000, n_queries: int = 256,
 
     out = Path(out_path) if out_path else \
         Path(__file__).resolve().parents[1] / "BENCH_queries.json"
+    prev = _read_bench_json(out)          # keep the --shards section alive
+    if "sharded" in prev:
+        result["sharded"] = prev["sharded"]
     out.write_text(json.dumps(result, indent=2) + "\n")
+    print(f"BENCH {json.dumps(result)}")
+    return result
+
+
+def run_sharded(rows: int = 100_000, n_queries: int = 256,
+                shard_counts=(1, 2, 4, 8), batch: int = 64,
+                partition: str = "range", out_path: str = None,
+                backend: str = "numpy", smoke: bool = False) -> dict:
+    """Scatter-gather scaling mode (DESIGN.md §6).
+
+    For each shard count K an airline-rows ``ShardedCOAX`` (range partition
+    on the distance attribute, each shard learning its own FDs) answers the
+    same rect set through the executor's sharded mode, on ``backend``
+    (``"numpy"`` or ``"device"`` — per-shard ``DevicePlan``s; recorded in
+    the output).  Reported per K: sustained QPS vs the single-index
+    baseline on the same backend, the shard-pruning rate (fraction of
+    (query, shard) pairs the bbox test skipped) and the per-shard work
+    rollup.  Every K's hits are asserted bit-identical to the single index
+    before timing; ``smoke`` keeps that gate as the CI assertion and
+    shrinks nothing else (the sweep is already small).  Results merge into
+    the ``sharded`` key of ``BENCH_queries.json`` so the batch-mode
+    sections survive.
+    """
+    from repro.engine import ShardedCOAX
+
+    if backend not in ("numpy", "device"):
+        raise ValueError(f"--shards sweeps one backend at a time, got {backend!r}")
+    if backend == "device":
+        from repro.engine import device_available
+        if not device_available():
+            raise RuntimeError("--backend device requested but jax is unavailable")
+    ds = dataset("airline", rows)
+    rects = np.asarray(queries("airline", rows, n_queries, PCFG.knn_k))
+    single = COAXIndex(ds.data, backend=backend)
+    ex1 = BatchQueryExecutor(single, max_batch=batch)
+    base_hits = ex1.execute(rects)               # warm + correctness anchor
+    ex1.reset_stats()
+    t0 = time.perf_counter()
+    ex1.execute(rects)
+    single_qps = len(rects) / (time.perf_counter() - t0)
+    emit("sharded/airline/single_index_qps", single_qps,
+         f"rows={rows},queries={len(rects)},batch={batch},backend={backend}")
+
+    result = {"dataset": "airline", "rows": rows, "n_queries": len(rects),
+              "batch": batch, "partition": partition, "backend": backend,
+              "single_qps": single_qps, "shards": {}}
+    for k in shard_counts:
+        idx = ShardedCOAX(ds.data, n_shards=k, partition=partition,
+                          backend=backend)
+        ex = BatchQueryExecutor(idx, max_batch=batch, shards=k)
+        got = ex.execute(rects)                  # warm + agreement gate
+        assert all(np.array_equal(g, w) for g, w in zip(got, base_hits)), \
+            f"sharded hits disagree with single index at K={k}"
+        ex.reset_stats()
+        t0 = time.perf_counter()
+        ex.execute(rects)
+        dt = time.perf_counter() - t0
+        qps = len(rects) / dt
+        s = ex.stats()
+        scattered = sum(p["queries"] for p in s["per_shard"])
+        pruned = 1.0 - scattered / (len(rects) * k)
+        result["shards"][str(k)] = {
+            "qps": qps, "speedup_vs_single": qps / single_qps,
+            "pruned_frac": pruned, "rows_scanned": s["rows_scanned"],
+            "per_shard": s["per_shard"], "shard_sizes": idx.shard_sizes(),
+        }
+        emit(f"sharded/airline/qps@K{k}", qps,
+             f"speedup={qps / single_qps:.2f}x,pruned={pruned:.2f},"
+             f"rows_scanned={s['rows_scanned']}")
+    if smoke:
+        emit("sharded/airline/smoke", 1.0,
+             f"hit agreement ok across K={list(shard_counts)} "
+             f"({len(rects)} rects)")
+
+    out = Path(out_path) if out_path else \
+        Path(__file__).resolve().parents[1] / "BENCH_queries.json"
+    merged = _read_bench_json(out)
+    merged["sharded"] = result
+    out.write_text(json.dumps(merged, indent=2) + "\n")
     print(f"BENCH {json.dumps(result)}")
     return result
 
@@ -286,6 +382,9 @@ if __name__ == "__main__":
                     help="throughput mode: QPS vs batch size + BENCH_queries.json")
     ap.add_argument("--mixed", action="store_true",
                     help="read/write mode: insert-ratio sweep + BENCH_updates.json")
+    ap.add_argument("--shards", type=str, default=None, metavar="K[,K...]",
+                    help="sharded mode: scatter-gather scaling sweep over "
+                         "these shard counts (DESIGN.md §6)")
     ap.add_argument("--backend", choices=("numpy", "device", "both"),
                     default="both", help="which query_batch backend(s) to sweep")
     ap.add_argument("--smoke", action="store_true",
@@ -293,7 +392,15 @@ if __name__ == "__main__":
     ap.add_argument("--rows", type=int, default=None)
     ap.add_argument("--queries", type=int, default=None)
     args = ap.parse_args()
-    if args.mixed:
+    if args.shards:
+        counts = tuple(int(k) for k in args.shards.split(","))
+        run_sharded(rows=args.rows or 100_000,
+                    n_queries=args.queries or (64 if args.smoke else 256),
+                    shard_counts=counts, smoke=args.smoke,
+                    # --backend both is the batch-mode default; the sharded
+                    # sweep runs one backend per invocation
+                    backend="numpy" if args.backend == "both" else args.backend)
+    elif args.mixed:
         run_mixed(rows=args.rows or 50_000,
                   n_queries=args.queries or (128 if args.smoke else 192),
                   smoke=args.smoke)

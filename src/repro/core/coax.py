@@ -223,7 +223,8 @@ class COAXIndex:
     # ------------------------------------------------------------------ #
     # Write path (DESIGN.md §5)
     # ------------------------------------------------------------------ #
-    def insert(self, rows: np.ndarray) -> np.ndarray:
+    def insert(self, rows: np.ndarray,
+               ids: Optional[np.ndarray] = None) -> np.ndarray:
         """Insert rows; returns their assigned original row ids.
 
         Each row is margin-checked against every learned FD group: rows
@@ -231,13 +232,25 @@ class COAXIndex:
         outlier delta (the write-time mirror of the build-time split).  All
         inserts stream into the live ``BayesianLinearModel`` trackers so
         ``drift_predictability`` reflects the data actually arriving.
+
+        ``ids`` lets an owning plane (``engine.sharded.ShardedCOAX``) assign
+        ids from a GLOBAL sequence so they stay unique across shards; the
+        caller is responsible for never reusing an id.  Default: the index's
+        own ``arange`` sequence.
         """
         rows = np.ascontiguousarray(np.atleast_2d(np.asarray(rows, dtype=np.float32)))
         if rows.ndim != 2 or rows.shape[1] != self.n_dims:
             raise ValueError(f"rows must be (m, {self.n_dims}), got {rows.shape}")
         m = rows.shape[0]
-        ids = np.arange(self._next_id, self._next_id + m, dtype=np.int64)
-        self._next_id += m
+        if ids is None:
+            ids = np.arange(self._next_id, self._next_id + m, dtype=np.int64)
+            self._next_id += m
+        else:
+            ids = np.asarray(ids, dtype=np.int64).copy()
+            if ids.shape[0] != m:
+                raise ValueError("ids length must match rows")
+            if m:
+                self._next_id = max(self._next_id, int(ids.max()) + 1)
         if m == 0:
             return ids
         inlier = np.ones(m, dtype=bool)

@@ -82,8 +82,9 @@ def f32_ceil(x: np.ndarray) -> np.ndarray:
     x = np.asarray(x, dtype=np.float64)
     with np.errstate(over="ignore"):
         y = x.astype(np.float32)
-    rounded_down = y.astype(np.float64) < x
-    return np.where(rounded_down, np.nextafter(y, np.float32(np.inf)), y)
+        rounded_down = y.astype(np.float64) < x
+        # nextafter past f32 max overflows to +inf — the correct ceil there
+        return np.where(rounded_down, np.nextafter(y, np.float32(np.inf)), y)
 
 
 def gather_ranges(los: np.ndarray, his: np.ndarray,

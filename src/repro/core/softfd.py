@@ -394,6 +394,13 @@ def learn_soft_fds(
     cfg: SoftFDConfig = SoftFDConfig(),
     candidate_dims: Optional[Sequence[int]] = None,
 ) -> List[FDGroup]:
-    """End-to-end: detect pairs, merge into predictor groups."""
+    """End-to-end: detect pairs, merge into predictor groups.
+
+    Degenerate inputs (fewer rows than a bucket fit can support — empty
+    shards of a partitioned build, freshly emptied indexes) learn nothing:
+    every dim stays indexed and the caller's primary grid holds all rows.
+    """
+    if data.shape[0] < 8:
+        return []
     pairs = detect_soft_fds(data, cfg, candidate_dims)
     return merge_groups(pairs, data, cfg)

@@ -93,11 +93,16 @@ def translate_rects(
     """Batched Eq. 2: project B full rects onto the indexed dims at once.
 
     ``rects`` is (B, D, 2); returns (B, len(keep_dims), 2) nav-rects in
-    ``keep_dims`` order — exactly ``translate_rect`` applied per row, but one
-    vectorised pass over the batch (the batched engine's translation stage).
+    ``keep_dims`` order — BIT-identical to ``translate_rect`` applied per
+    row (the property test in ``tests/test_exactness_props.py`` holds the
+    two to that), but one vectorised pass over the batch (the batched
+    engine's translation stage).
 
-    An unconstrained dependent translates to ``(-inf, +inf)``, so the
-    intersection is a no-op for it and no per-query masking is needed.
+    A dependent with no finite bound is skipped per query, mirroring the
+    scalar path: a fully unconstrained dependent ``(-inf, +inf)`` would
+    translate to a no-op interval anyway, while a degenerate all-infinite
+    constraint like ``[+inf, +inf)`` must not clamp the nav-rect the
+    scalar path leaves open.
     """
     rects = np.asarray(rects, dtype=np.float64)
     if rects.ndim != 3 or rects.shape[-1] != 2:
@@ -122,8 +127,13 @@ def translate_rects(
                 t_lo, t_hi = lo_numer / mdl.m, hi_numer / mdl.m
             else:
                 t_lo, t_hi = hi_numer / mdl.m, lo_numer / mdl.m
-            out_lo[:, k] = np.maximum(out_lo[:, k], t_lo)
-            out_hi[:, k] = np.minimum(out_hi[:, k], t_hi)
+            # same per-query skip as the scalar path: only a dependent with
+            # a finite bound constrains the predictor
+            con = np.isfinite(lo[:, d]) | np.isfinite(hi[:, d])
+            out_lo[:, k] = np.where(con, np.maximum(out_lo[:, k], t_lo),
+                                    out_lo[:, k])
+            out_hi[:, k] = np.where(con, np.minimum(out_hi[:, k], t_hi),
+                                    out_hi[:, k])
 
     out_hi = np.maximum(out_hi, out_lo)               # keep lo<=hi (empty ok)
     return np.stack([out_lo, out_hi], axis=-1)

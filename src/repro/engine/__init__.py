@@ -1,4 +1,4 @@
-"""Batched query execution engine (DESIGN.md §2, §4, §5).
+"""Batched query execution engine (DESIGN.md §2, §4, §5, §6).
 
 The per-call path (``COAXIndex.query``) answers one rect per Python
 round-trip; this package turns B queries into one translation pass, one
@@ -7,14 +7,18 @@ server modelled on ``runtime.router``'s continuous-batching loop — the same
 pattern, applied to range-query traffic instead of decode requests.
 Under the mutable lifecycle (§5) the server also admits inserts/deletes,
 flushed at wave boundaries so every wave sees one snapshot+delta state.
+``ShardedCOAX`` (§6) scales the same contracts *out*: K per-region shards
+behind one scatter-gather plane, each with its own FDs, delta and epochs.
 
 ``BatchQueryExecutor`` — wave-sliced ``query_batch`` driver with per-wave stats
 ``QueryServer``        — submit rects/writes, drain in priority/FIFO waves
+``ShardedCOAX``        — sharded scatter-gather serving plane (§6)
 ``DevicePlan``         — frozen device-resident serving plane (§4); imported
                          lazily so the numpy engine works without jax
 """
 from .executor import BatchQueryExecutor, WaveStats, split_hits
 from .server import PendingQuery, QueryServer
+from .sharded import ShardedCOAX, partition_rows
 
 __all__ = [
     "BatchQueryExecutor",
@@ -22,6 +26,8 @@ __all__ = [
     "split_hits",
     "QueryServer",
     "PendingQuery",
+    "ShardedCOAX",
+    "partition_rows",
     "DevicePlan",
     "device_available",
 ]

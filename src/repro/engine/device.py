@@ -84,8 +84,9 @@ def f32_floor(x: np.ndarray) -> np.ndarray:
     x = np.asarray(x, dtype=np.float64)
     with np.errstate(over="ignore"):
         y = x.astype(np.float32)
-    rounded_up = y.astype(np.float64) > x
-    return np.where(rounded_up, np.nextafter(y, np.float32(-np.inf)), y)
+        rounded_up = y.astype(np.float64) > x
+        # nextafter past f32 min overflows to -inf — the correct floor there
+        return np.where(rounded_up, np.nextafter(y, np.float32(-np.inf)), y)
 
 
 def _next_pow2(n: int) -> int:

@@ -44,6 +44,9 @@ class WaveStats:
     epoch: int = 0               # snapshot epoch the wave was served from (§5)
     delta_rows: int = 0          # live delta-log rows unioned into the wave
     tombstones: int = 0          # tombstoned ids masked out of the wave
+    shards_hit: int = 0          # shards the wave scattered to (§6; 0 = unsharded)
+    shard_stats: tuple = ()      # per-shard (queries, rows_scanned,
+                                 # cells_probed, fallbacks) this wave (§6)
 
     @property
     def qps(self) -> float:
@@ -62,12 +65,30 @@ class BatchQueryExecutor:
         ``"device"`` set it on indexes that expose one (GridFile/COAXIndex)
         before the first wave.  Requesting ``"device"`` on an index without
         backend support raises.
+    shards : ``None`` serves the index as-is.  ``K`` turns on sharded mode
+        (DESIGN.md §6): an index that is already a K-shard plane is accepted
+        unchanged; a mutable single index (``live_rows`` + ``config``) is
+        re-partitioned into a ``ShardedCOAX`` over its live rows.  Waves then
+        carry per-shard rollups in ``WaveStats.shard_stats``.
     """
 
     def __init__(self, index, max_batch: int = 64,
-                 backend: Optional[str] = None):
+                 backend: Optional[str] = None,
+                 shards: Optional[int] = None):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
+        if shards is not None:
+            n = getattr(index, "n_shards", None)
+            if n is not None:
+                if n != shards:
+                    raise ValueError(
+                        f"index has {n} shards, executor asked for {shards}")
+            elif hasattr(index, "live_rows") and hasattr(index, "config"):
+                from .sharded import ShardedCOAX
+                index = ShardedCOAX.from_index(index, shards)
+            else:
+                raise ValueError(
+                    f"{type(index).__name__} cannot be sharded")
         self.index = index
         self.max_batch = max_batch
         self.wave_stats: List[WaveStats] = []
@@ -123,6 +144,11 @@ class BatchQueryExecutor:
             out.extend(split_hits(qids, rids, wave.shape[0]))
             bs = getattr(self.index, "last_batch_stats", None) \
                 if self._batched else None
+            ss = getattr(self.index, "last_shard_stats", None) \
+                if self._batched else None
+            shard_stats = tuple(
+                (s.queries, s.rows_scanned, s.cells_probed, s.fallbacks)
+                for s in ss) if ss is not None else ()
             self.wave_stats.append(WaveStats(
                 len(self.wave_stats), int(wave.shape[0]), int(rids.size), dt,
                 rows_scanned=bs.rows_scanned if bs else 0,
@@ -131,14 +157,29 @@ class BatchQueryExecutor:
                 fallbacks=bs.fallbacks if bs else 0,
                 epoch=int(getattr(self.index, "epoch", 0)),
                 delta_rows=int(getattr(self.index, "delta_rows", 0)),
-                tombstones=int(getattr(self.index, "tombstone_count", 0))))
+                tombstones=int(getattr(self.index, "tombstone_count", 0)),
+                shards_hit=sum(1 for s in shard_stats if s[0] > 0),
+                shard_stats=shard_stats))
         return out
 
     # ------------------------------------------------------------------ #
     def stats(self) -> dict:
         total_q = sum(w.n_queries for w in self.wave_stats)
         total_s = sum(w.latency_s for w in self.wave_stats)
+        n_shards = int(getattr(self.index, "n_shards", 0))
+        per_shard = []
+        if n_shards:
+            acc = np.zeros((n_shards, 4), dtype=np.int64)
+            for w in self.wave_stats:
+                for k, s in enumerate(w.shard_stats):
+                    acc[k] += s
+            per_shard = [
+                {"queries": int(a[0]), "rows_scanned": int(a[1]),
+                 "cells_probed": int(a[2]), "fallbacks": int(a[3])}
+                for a in acc]
         return {
+            "shards": n_shards,
+            "per_shard": per_shard,
             "waves": len(self.wave_stats),
             "queries": total_q,
             "hits": sum(w.n_hits for w in self.wave_stats),

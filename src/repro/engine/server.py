@@ -41,17 +41,22 @@ class QueryServer:
 
     Parameters
     ----------
-    index : engine handed to ``BatchQueryExecutor`` (COAXIndex or baseline).
+    index : engine handed to ``BatchQueryExecutor`` (COAXIndex, ShardedCOAX
+        or baseline).
     max_batch : queries fused per wave.
     backend : forwarded to ``BatchQueryExecutor`` — ``"device"`` serves
         waves from the index's device-resident plan (DESIGN.md §4).
+    shards : forwarded to ``BatchQueryExecutor`` — ``K`` serves waves from a
+        K-shard scatter-gather plane (DESIGN.md §6), re-partitioning a
+        single mutable index when needed; stats gain per-shard rollups.
     """
 
     def __init__(self, index, max_batch: int = 64,
                  executor: Optional[BatchQueryExecutor] = None,
-                 backend: Optional[str] = None):
+                 backend: Optional[str] = None,
+                 shards: Optional[int] = None):
         self.executor = executor or BatchQueryExecutor(
-            index, max_batch=max_batch, backend=backend)
+            index, max_batch=max_batch, backend=backend, shards=shards)
         self._pending: Dict[int, PendingQuery] = {}
         self._ids = itertools.count()
         self._write_queue: List[Tuple[int, str, object]] = []

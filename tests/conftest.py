@@ -12,6 +12,18 @@ if SRC not in sys.path:
     sys.path.insert(0, SRC)
 
 
+@pytest.fixture
+def rng():
+    """Deterministic per-test RNG.
+
+    Tests draw randomness from this instead of seeding global numpy state,
+    so results are identical whether or not a plugin (e.g. pytest-randomly)
+    reseeds the globals — the suite behaves the same with and without
+    ``-p no:randomly``.
+    """
+    return np.random.default_rng(0xC0AC5)
+
+
 def tiny_config(cfg):
     """Shrink an arch config to smoke scale, preserving its family traits."""
     kw = dict(

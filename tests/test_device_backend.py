@@ -11,36 +11,16 @@ import pytest
 jax = pytest.importorskip("jax")
 
 from repro.core import (COAXIndex, GridFile, full_rect, point_rect)
-from repro.data import knn_rect_queries, make_airline, make_generic_fd, make_osm
+from repro.data import make_airline, make_osm
 from repro.engine import BatchQueryExecutor, QueryServer, split_hits
+from workloads import engine_workload, engine_workloads, rects_for
 
 
-def _workloads():
-    # same 4 synthetic workloads as tests/test_engine.py
-    return [
-        ("airline", make_airline(20_000, seed=3)),
-        ("osm", make_osm(20_000, seed=3)),
-        ("generic_fd", make_generic_fd(15_000, 5, ((0, 1), (2, 3)), seed=7)),
-        ("generic_no_outliers",
-         make_generic_fd(15_000, 4, ((0, 1),), outlier_frac=0.0, seed=11)),
-    ]
-
-
-def _rects_for(data, n=24, seed=0):
-    d = data.shape[1]
-    rects = list(knn_rect_queries(data, n, 64, seed=seed, sample_cap=10_000))
-    rects.append(full_rect(d))                            # full-range rect
-    rects.append(np.stack([np.full(d, 1e12), np.full(d, 1e12 + 1)], axis=-1))
-    rects.append(point_rect(data[0]))                     # empty-result rect
-    lop = np.full(d, -np.inf); lop[0] = float(np.median(data[:, 0]))
-    rects.append(np.stack([lop, np.full(d, np.inf)], axis=-1))  # half-open
-    return np.stack(rects)
-
-
-@pytest.mark.parametrize("name,ds", _workloads(), ids=lambda w: w if isinstance(w, str) else "")
+@pytest.mark.parametrize("name,ds", engine_workloads(),
+                         ids=lambda w: w if isinstance(w, str) else "")
 def test_device_equals_numpy_and_scalar(name, ds):
     idx = COAXIndex(ds.data)
-    rects = _rects_for(ds.data)
+    rects = rects_for(ds.data)
     q_n, r_n = idx.query_batch(rects)
     idx.backend = "device"
     q_d, r_d = idx.query_batch(rects)
@@ -97,7 +77,7 @@ def test_device_empty_batch_and_empty_index():
 def test_device_all_outlier_queries():
     """Point queries aimed only at outlier rows: the primary probe returns
     nothing, every hit flows through the outlier grid's device plan."""
-    ds = make_generic_fd(15_000, 5, ((0, 1), (2, 3)), seed=7)
+    ds = engine_workload("generic_fd")
     idx = COAXIndex(ds.data)
     assert idx.outlier.n_rows > 0
     o_rows = ds.data[idx.outlier.row_ids[:12]]
@@ -192,7 +172,7 @@ def gf_wrap(gf):
 def test_executor_and_server_device_plumbing():
     ds = make_osm(8_000, seed=5)
     idx = COAXIndex(ds.data)
-    rects = _rects_for(ds.data, n=10, seed=3)[:10]
+    rects = rects_for(ds.data, n=10, seed=3)[:10]
     ex = BatchQueryExecutor(idx, max_batch=4, backend="device")
     assert idx.backend == "device" and ex.backend == "device"
     got = ex.execute(rects)

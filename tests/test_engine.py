@@ -12,56 +12,35 @@ import pytest
 
 from repro.core import (COAXIndex, FullScan, GridFile, full_rect, point_rect,
                         translate_rect, translate_rects)
-from repro.data import knn_rect_queries, make_airline, make_generic_fd, make_osm
+from repro.data import make_airline, make_osm
 from repro.engine import BatchQueryExecutor, QueryServer, split_hits
+from workloads import (engine_workload, engine_workloads,
+                       fullscan_expected, rects_for)
 
 
-def _workloads():
-    # >=3 synthetic workloads; generic_fd with outlier_frac=0 exercises the
-    # no-outlier index (empty outlier grid + bbox skip disabled).
-    return [
-        ("airline", make_airline(20_000, seed=3)),
-        ("osm", make_osm(20_000, seed=3)),
-        ("generic_fd", make_generic_fd(15_000, 5, ((0, 1), (2, 3)), seed=7)),
-        ("generic_no_outliers",
-         make_generic_fd(15_000, 4, ((0, 1),), outlier_frac=0.0, seed=11)),
-    ]
-
-
-def _rects_for(data, n=24, seed=0):
-    d = data.shape[1]
-    rects = list(knn_rect_queries(data, n, 64, seed=seed, sample_cap=10_000))
-    rects.append(full_rect(d))                            # full-range rect
-    rects.append(np.stack([np.full(d, 1e12), np.full(d, 1e12 + 1)], axis=-1))
-    rects.append(point_rect(data[0]))                     # empty-result rect
-    lop = np.full(d, -np.inf); lop[0] = float(np.median(data[:, 0]))
-    rects.append(np.stack([lop, np.full(d, np.inf)], axis=-1))  # half-open
-    return np.stack(rects)
-
-
-@pytest.mark.parametrize("name,ds", _workloads(), ids=lambda w: w if isinstance(w, str) else "")
+@pytest.mark.parametrize("name,ds", engine_workloads(),
+                         ids=lambda w: w if isinstance(w, str) else "")
 def test_coax_query_batch_equals_per_rect_query(name, ds):
     idx = COAXIndex(ds.data)
-    rects = _rects_for(ds.data)
+    rects = rects_for(ds.data)
     qids, rids = idx.query_batch(rects)
     # flat hit list is (query, row) sorted
     assert np.all(np.diff(qids) >= 0)
     per_query = split_hits(qids, rids, rects.shape[0])
-    fs = FullScan(ds.data)
+    want = fullscan_expected(ds.data, np.arange(ds.data.shape[0]), rects)
     saw_empty = saw_full = False
     for i, r in enumerate(rects):
-        want = idx.query(r)
-        assert np.array_equal(per_query[i], want), (name, i)
-        assert np.array_equal(want, fs.query(r)), (name, i)  # ground truth
-        saw_empty |= want.size == 0
-        saw_full |= want.size == ds.data.shape[0]
+        assert np.array_equal(idx.query(r), want[i]), (name, i)  # ground truth
+        assert np.array_equal(per_query[i], want[i]), (name, i)
+        saw_empty |= want[i].size == 0
+        saw_full |= want[i].size == ds.data.shape[0]
     assert saw_empty and saw_full
 
 
 def test_outlier_bbox_boundary_query_not_skipped():
     """A rect whose lower bound equals the outlier bbox max must still probe
     the outlier index (half-open [lo, hi) vs closed bbox: lo <= bhi)."""
-    ds = make_generic_fd(15_000, 5, ((0, 1), (2, 3)), seed=7)
+    ds = engine_workload("generic_fd")
     idx = COAXIndex(ds.data)
     assert idx._outlier_lo is not None
     d = int(np.argmax(idx._outlier_hi - idx._outlier_lo))
@@ -69,8 +48,7 @@ def test_outlier_bbox_boundary_query_not_skipped():
     cand = np.where(ds.data[:, d].astype(np.float64) == float(idx._outlier_hi[d]))[0]
     assert cand.size
     rect = point_rect(ds.data[cand[0]])
-    fs = FullScan(ds.data)
-    want = fs.query(rect)
+    want = fullscan_expected(ds.data, np.arange(ds.data.shape[0]), rect[None])[0]
     assert np.array_equal(idx.query(rect), want)
     assert np.array_equal(idx.query_batch_split(rect[None])[0], want)
 
@@ -78,7 +56,7 @@ def test_outlier_bbox_boundary_query_not_skipped():
 def test_translate_rects_matches_scalar():
     ds = make_airline(10_000, seed=5)
     idx = COAXIndex(ds.data)
-    rects = _rects_for(ds.data, n=16, seed=2)
+    rects = rects_for(ds.data, n=16, seed=2)
     batch = translate_rects(rects, idx.groups, idx.keep_dims)
     for i, r in enumerate(rects):
         single = translate_rect(r, idx.groups, idx.keep_dims)
@@ -133,7 +111,7 @@ def test_batch_kernel_matches_single_and_oracle():
 def test_executor_waves_and_fallback():
     ds = make_osm(8_000, seed=1)
     idx = COAXIndex(ds.data)
-    rects = _rects_for(ds.data, n=10, seed=3)
+    rects = rects_for(ds.data, n=10, seed=3)
     ex = BatchQueryExecutor(idx, max_batch=4)
     got = ex.execute(rects)
     # baseline engine without query_batch goes through the per-rect loop
@@ -152,7 +130,7 @@ def test_wavestats_report_planning_work():
     work so backend comparisons report work done, not just QPS."""
     ds = make_airline(8_000, seed=2)
     idx = COAXIndex(ds.data)
-    rects = _rects_for(ds.data, n=10, seed=3)
+    rects = rects_for(ds.data, n=10, seed=3)
     ex = BatchQueryExecutor(idx, max_batch=4)
     ex.execute(rects)
     s = ex.stats()
@@ -205,7 +183,7 @@ def test_gather_ranges_accepts_precomputed_lens():
 def test_query_server_drains_priority_waves():
     ds = make_airline(8_000, seed=2)
     idx = COAXIndex(ds.data)
-    rects = _rects_for(ds.data, n=9, seed=4)
+    rects = rects_for(ds.data, n=9, seed=4)
     srv = QueryServer(idx, max_batch=5)
     qids = [srv.submit(r, priority=float(i % 3), arrival=float(i))
             for i, r in enumerate(rects)]

@@ -16,67 +16,19 @@ import numpy as np
 import pytest
 
 from _hypothesis_compat import given, settings, st
-from repro.core import (COAXIndex, CoaxConfig, DeltaPlane, FullScan,
-                        full_rect, point_rect)
-from repro.data import knn_rect_queries, make_airline, make_generic_fd, make_osm
-from repro.engine import BatchQueryExecutor, QueryServer, split_hits
-
-NOAUTO = CoaxConfig(auto_compact=False)
-
-
-def _rects_for(data, n=10, seed=0):
-    d = data.shape[1]
-    rects = list(knn_rect_queries(data, n, 64, seed=seed, sample_cap=8_000))
-    rects.append(full_rect(d))
-    rects.append(point_rect(data[0]))
-    lop = np.full(d, -np.inf)
-    lop[0] = float(np.median(data[:, 0]))
-    rects.append(np.stack([lop, np.full(d, np.inf)], axis=-1))
-    return np.stack(rects)
+from repro.core import COAXIndex, CoaxConfig, DeltaPlane, FullScan, full_rect
+from repro.data import make_airline, make_generic_fd
+from repro.engine import BatchQueryExecutor, QueryServer
+from workloads import (NOAUTO, assert_equiv, fullscan_expected,
+                       mutable_workloads, rects_for, violate_fd)
 
 
-def _assert_equiv(idx, rects, device=False, scratch=True, tag=""):
-    """idx's scalar + batched answers == scratch rebuild == FullScan oracle."""
-    rows, ids = idx.live_rows()
-    fs = FullScan(rows)
-    want = [np.sort(ids[fs.query(r)]) for r in rects]
-    batch = idx.query_batch_split(rects)
-    for i, r in enumerate(rects):
-        assert np.array_equal(idx.query(r), want[i]), (tag, "scalar", i)
-        assert np.array_equal(batch[i], want[i]), (tag, "batch", i)
-    if scratch:
-        fresh = COAXIndex(rows, NOAUTO, row_ids=ids)
-        for i, r in enumerate(rects):
-            assert np.array_equal(fresh.query(r), want[i]), (tag, "scratch", i)
-    if device:
-        pytest.importorskip("jax")
-        bk = idx.backend
-        idx.backend = "device"
-        qd, rd = idx.query_batch(rects)
-        idx.backend = bk
-        dev = split_hits(qd, rd, rects.shape[0])
-        for i in range(rects.shape[0]):
-            assert np.array_equal(dev[i], want[i]), (tag, "device", i)
+def _rects(data, n=10, seed=0):
+    """Mutation-schedule rect mix (no far-out-of-range extreme rect)."""
+    return rects_for(data, n=n, seed=seed, extremes=False, sample_cap=8_000)
 
 
-def _violate(ds, rows):
-    """Break the workload's first FD group on a copy of ``rows``."""
-    rows = rows.copy()
-    dep = ds.correlated_groups[0][1]
-    rows[:, dep] = rows[:, dep] * 3.0 + 1000.0
-    return rows
-
-
-def _workloads():
-    return [
-        ("airline", make_airline(12_000, seed=3), lambda s, m: make_airline(m, seed=s).data),
-        ("osm", make_osm(12_000, seed=3), lambda s, m: make_osm(m, seed=s).data),
-        ("generic_fd", make_generic_fd(10_000, 5, ((0, 1), (2, 3)), seed=7),
-         lambda s, m: make_generic_fd(m, 5, ((0, 1), (2, 3)), seed=s).data),
-    ]
-
-
-@pytest.mark.parametrize("name,ds,more", _workloads(),
+@pytest.mark.parametrize("name,ds,more", mutable_workloads(),
                          ids=lambda w: w if isinstance(w, str) else "")
 def test_interleaved_ops_equal_scratch_rebuild(name, ds, more):
     """Deterministic interleaving: base deletes, in-pattern inserts,
@@ -84,17 +36,17 @@ def test_interleaved_ops_equal_scratch_rebuild(name, ds, more):
     equivalence checked before AND after the compaction, numpy and device."""
     rng = np.random.default_rng(1)
     idx = COAXIndex(ds.data, NOAUTO)
-    rects = _rects_for(ds.data, n=8, seed=0)
+    rects = _rects(ds.data, n=8, seed=0)
 
     idx.delete(rng.choice(ds.data.shape[0], 400, replace=False))
     fresh = more(101, 600)
     ids_a = idx.insert(fresh[:300])                      # in-pattern
-    ids_b = idx.insert(_violate(ds, fresh[300:]))        # FD-violating
+    ids_b = idx.insert(violate_fd(ds, fresh[300:]))        # FD-violating
     assert idx.delta_outlier.n_live > 0, "violators must hit the outlier delta"
     idx.delete(ids_a[:50])                               # delta-log tombstones
     idx.delete(ids_b[:50])
     assert idx.delete(ids_a[:50]) == 0                   # double delete: no-op
-    _assert_equiv(idx, rects, device=(name == "airline"), tag=f"{name}-pre")
+    assert_equiv(idx, rects, device=(name == "airline"), tag=f"{name}-pre")
 
     info = idx.compact()
     assert info["epoch"] == idx.epoch == 1
@@ -102,8 +54,8 @@ def test_interleaved_ops_equal_scratch_rebuild(name, ds, more):
     assert idx.primary.epoch == idx.outlier.epoch == 1
 
     idx.delete(np.concatenate([ids_a[50:80], ids_b[50:80]]))
-    idx.insert(_violate(ds, more(103, 120)))
-    _assert_equiv(idx, rects, device=True, tag=f"{name}-post")
+    idx.insert(violate_fd(ds, more(103, 120)))
+    assert_equiv(idx, rects, device=True, tag=f"{name}-post")
 
 
 def test_row_count_and_id_bookkeeping():
@@ -127,7 +79,7 @@ def test_empty_index_after_deleting_everything():
     ds = make_generic_fd(2_000, 4, ((0, 1),), seed=4)
     idx = COAXIndex(ds.data, NOAUTO)
     assert idx.delete(np.arange(2_000)) == 2_000
-    rects = _rects_for(ds.data, n=4, seed=1)
+    rects = _rects(ds.data, n=4, seed=1)
     for r in rects:
         assert idx.query(r).size == 0
     qids, rids = idx.query_batch(rects)
@@ -144,7 +96,7 @@ def test_empty_index_after_deleting_everything():
 _PROP_DS = make_generic_fd(1_500, 4, ((0, 1),), seed=5)
 _PROP_BASE = COAXIndex(_PROP_DS.data, NOAUTO)
 _PROP_POOL = make_generic_fd(2_048, 4, ((0, 1),), seed=6).data
-_PROP_RECTS = _rects_for(_PROP_DS.data, n=6, seed=9)
+_PROP_RECTS = _rects(_PROP_DS.data, n=6, seed=9)
 
 _op = st.one_of(
     st.tuples(st.just("insert"), st.integers(0, 1_900), st.integers(1, 64),
@@ -163,7 +115,7 @@ def test_property_any_interleaving_equals_scratch(ops):
             _, start, m, violate = op
             rows = _PROP_POOL[start:start + m]
             if violate:
-                rows = _violate(_PROP_DS, rows)
+                rows = violate_fd(_PROP_DS, rows)
             idx.insert(rows)
         elif op[0] == "delete":
             _, seed, m = op
@@ -173,7 +125,7 @@ def test_property_any_interleaving_equals_scratch(ops):
                 idx.delete(rng.choice(live, min(m, live.size), replace=False))
         else:
             idx.compact()
-    _assert_equiv(idx, _PROP_RECTS, scratch=True, tag=str(ops)[:80])
+    assert_equiv(idx, _PROP_RECTS, scratch=True, tag=str(ops)[:80])
 
 
 # --------------------------------------------------------------------- #
@@ -201,7 +153,7 @@ def test_drift_trigger_relearns_on_fd_break():
                      drift_threshold=0.5)
     idx = COAXIndex(ds.data, cfg)
     assert idx.drift_predictability() > 0.9   # seeded at the frozen trend
-    drifted = _violate(ds, make_generic_fd(3_000, 4, ((0, 1),), seed=8).data)
+    drifted = violate_fd(ds, make_generic_fd(3_000, 4, ((0, 1),), seed=8).data)
     idx.insert(drifted)
     assert idx.compactions == 1 and idx.epoch == 1, \
         "drift trigger should have compacted"
@@ -254,7 +206,7 @@ def test_executor_revalidates_backend_and_tracks_epochs():
     jax = pytest.importorskip("jax")
     ds = make_airline(6_000, seed=2)
     idx = COAXIndex(ds.data, NOAUTO)
-    rects = _rects_for(ds.data, n=6, seed=3)
+    rects = _rects(ds.data, n=6, seed=3)
     ex = BatchQueryExecutor(idx, max_batch=4, backend="device")
     got = ex.execute(rects)
     idx.backend = "numpy"                     # external flip mid-stream...
@@ -265,10 +217,9 @@ def test_executor_revalidates_backend_and_tracks_epochs():
     s = ex.stats()
     assert s["backend"] == "device"
     assert s["epochs"] == [0, 1]              # waves stamped with their epoch
-    rows, ids = idx.live_rows()
-    fs = FullScan(rows)
-    for i, r in enumerate(rects):
-        assert np.array_equal(got2[i], np.sort(ids[fs.query(r)])), i
+    want = fullscan_expected(*idx.live_rows(), rects)
+    for i in range(rects.shape[0]):
+        assert np.array_equal(got2[i], want[i]), i
     assert ex.wave_stats[-1].epoch == 1
 
 
@@ -276,7 +227,7 @@ def test_server_write_admission_and_cancel():
     ds = make_generic_fd(5_000, 4, ((0, 1),), seed=1)
     idx = COAXIndex(ds.data, NOAUTO)
     srv = QueryServer(idx, max_batch=4)
-    rects = _rects_for(ds.data, n=5, seed=2)
+    rects = _rects(ds.data, n=5, seed=2)
     qids = srv.submit_many(rects)
     assert srv.cancel(qids[0]) and not srv.cancel(qids[0])
     assert not srv.cancel(10**6)
@@ -288,10 +239,9 @@ def test_server_write_admission_and_cancel():
     assert srv.write_results[w1].size == 80 and srv.write_results[w2] == 30
     # per-wave snapshot: writes were applied before wave 1, so every answer
     # reflects them
-    rows, ids = idx.live_rows()
-    fs = FullScan(rows)
-    for qid, r in zip(qids[1:], rects[1:]):
-        assert np.array_equal(res[qid], np.sort(ids[fs.query(r)]))
+    want = fullscan_expected(*idx.live_rows(), rects)
+    for qid, w in zip(qids[1:], want[1:]):
+        assert np.array_equal(res[qid], w)
     s = srv.stats()
     assert s["writes_applied"] == 2 and s["writes_pending"] == 0
     assert s["rows_inserted"] == 80 and s["rows_deleted"] == 30

@@ -1,0 +1,287 @@
+"""Sharded scatter-gather serving plane (DESIGN.md §6): differential tests.
+
+The contract under test: ``ShardedCOAX`` over K shards returns results
+bit-identical to a single ``COAXIndex`` over the union of rows — same flat
+``(query_id, row_id)`` arrays, same per-query hit sets — for every
+(workload × backend{numpy,device} × K ∈ {1,2,4} × deterministic
+insert/delete schedule) cell, including post-compaction epochs; every cell
+is also checked against the shared FullScan / rebuild-from-scratch oracles
+in ``tests/workloads.py``.  Plus the sharding-specific plumbing: hash and
+range routing, bbox pruning (a rect that misses every shard launches
+nowhere), empty/single-row/all-outlier shard edges, K > n_rows, per-shard
+epoch independence, and the executor/server ``shards=K`` mode with
+per-shard wave rollups.
+"""
+import numpy as np
+import pytest
+
+from repro.core import COAXIndex, full_rect, point_rect
+from repro.engine import (BatchQueryExecutor, QueryServer, ShardedCOAX,
+                          partition_rows, split_hits)
+from workloads import (NOAUTO, assert_equiv, fullscan_expected,
+                       mutable_workloads, rects_for, violate_fd)
+
+K_VALUES = (1, 2, 4)
+
+
+def _rects(data, n=6, seed=0):
+    return rects_for(data, n=n, seed=seed, extremes=False, sample_cap=6_000)
+
+
+def _assert_flat_equal(sharded, single, rects, tag=""):
+    """THE merge contract: identical flat (query_ids, row_ids) arrays."""
+    q_s, r_s = single.query_batch(rects)
+    q_k, r_k = sharded.query_batch(rects)
+    assert np.array_equal(q_k, q_s), (tag, "query_ids")
+    assert np.array_equal(r_k, r_s), (tag, "row_ids")
+
+
+def _apply_schedule(idx, ds, more):
+    """The deterministic insert/delete schedule every matrix cell runs:
+    base deletes, in-pattern inserts, FD-violating inserts, delta-log
+    deletes.  Ids come out identical for any index that assigns them in
+    global arrival order (COAXIndex and ShardedCOAX both do)."""
+    rng = np.random.default_rng(2)
+    idx.delete(rng.choice(ds.data.shape[0], 300, replace=False))
+    fresh = more(201, 400)
+    ids_a = idx.insert(fresh[:200])                  # in-pattern
+    ids_b = idx.insert(violate_fd(ds, fresh[200:]))  # FD-violating
+    idx.delete(ids_a[:40])
+    idx.delete(ids_b[:40])
+
+
+@pytest.mark.parametrize("k", K_VALUES)
+@pytest.mark.parametrize("name,ds,more", mutable_workloads(6_000),
+                         ids=lambda w: w if isinstance(w, str) else "")
+def test_sharded_matrix_equals_single_and_oracles(name, ds, more, k):
+    """One full matrix cell: build → mutate → compact, checking sharded ==
+    single index == scratch rebuild == FullScan on numpy AND device at
+    every stage."""
+    rects = _rects(ds.data)
+    single = COAXIndex(ds.data, NOAUTO)
+    sh = ShardedCOAX(ds.data, NOAUTO, n_shards=k, partition="range")
+    assert sh.n_rows == single.n_rows == ds.data.shape[0]
+    _assert_flat_equal(sh, single, rects, tag=f"{name}-K{k}-build")
+
+    _apply_schedule(single, ds, more)
+    _apply_schedule(sh, ds, more)
+    assert sh.n_rows == single.n_rows
+    assert_equiv(sh, rects, device=True, scratch=True, tag=f"{name}-K{k}-mut")
+    _assert_flat_equal(sh, single, rects, tag=f"{name}-K{k}-mut")
+
+    sh.compact()
+    single.compact()
+    assert all(s.epoch >= 1 for s in sh.shards)
+    assert sh.delta_rows == 0 and sh.tombstone_count == 0
+    assert_equiv(sh, rects, device=True, scratch=False, tag=f"{name}-K{k}-post")
+    _assert_flat_equal(sh, single, rects, tag=f"{name}-K{k}-post")
+
+
+def test_hash_partition_equals_range_and_single():
+    """Both partitioning strategies answer identically (routing only moves
+    rows between shards; results are routing-invariant)."""
+    name, ds, more = mutable_workloads(6_000)[0]
+    rects = _rects(ds.data)
+    single = COAXIndex(ds.data, NOAUTO)
+    for part in ("hash", "range"):
+        sh = ShardedCOAX(ds.data, NOAUTO, n_shards=3, partition=part,
+                         partition_dim=2)
+        _assert_flat_equal(sh, single, rects, tag=part)
+        for r in rects[:3]:
+            assert np.array_equal(sh.query(r), single.query(r)), part
+
+
+def test_partition_rows_routing_is_stable():
+    """Insert routing must agree with build routing: same value -> same
+    shard (hash), and range boundaries frozen at build route identically
+    when passed back in."""
+    rng = np.random.default_rng(3)
+    data = rng.normal(0, 100, (4_000, 3)).astype(np.float32)
+    for part in ("hash", "range"):
+        shard_of, bounds = partition_rows(data, 4, part, 1)
+        again, _ = partition_rows(data, 4, part, 1, boundaries=bounds)
+        assert np.array_equal(shard_of, again), part
+        assert shard_of.min() >= 0 and shard_of.max() < 4
+    with pytest.raises(ValueError):
+        partition_rows(data, 4, "round_robin", 0)
+
+
+# --------------------------------------------------------------------- #
+# Empty-shard and single-row-shard edges
+# --------------------------------------------------------------------- #
+def test_rect_pruning_to_zero_shards(rng):
+    """A rect beyond every shard's bbox launches on no shard and returns
+    empty — identical to the single index's answer."""
+    data = rng.uniform(0, 100, (3_000, 3)).astype(np.float32)
+    sh = ShardedCOAX(data, NOAUTO, n_shards=4, partition="range")
+    single = COAXIndex(data, NOAUTO)
+    far = np.stack([np.full(3, 1e6), np.full(3, 1e6 + 1)], axis=-1)
+    rects = np.stack([far, full_rect(3)])
+    assert not sh._touch_mask(far[None]).any()     # pruned everywhere
+    assert sh.query(far).size == 0
+    _assert_flat_equal(sh, single, rects, tag="prune")
+    q, r = sh.query_batch(far[None])
+    assert q.size == 0 and r.size == 0
+    assert all(s.queries == 0 for s in sh.last_shard_stats)
+
+
+def test_all_outlier_shard():
+    """Force the global FD groups onto every shard and aim one range shard
+    at rows that all violate them: that shard's primary grid is empty and
+    every one of its hits flows through its outlier sub-index."""
+    name, ds, _ = mutable_workloads(6_000)[2]      # generic_fd, FDs on (0,1)
+    groups = COAXIndex(ds.data, NOAUTO).groups     # learned from CLEAN data
+    assert len(groups) > 0
+    data = ds.data.copy()
+    # rows in the partition attribute's top quartile all break the FD:
+    # the dependent pinned far outside any clean-data margin
+    col = data[:, 0]
+    cut = np.quantile(col.astype(np.float64), 0.75)
+    hi_mask = col >= cut
+    data[hi_mask, ds.correlated_groups[0][1]] = 1e7
+    single = COAXIndex(data, NOAUTO, groups=groups)
+    sh = ShardedCOAX(data, NOAUTO, n_shards=4, partition="range",
+                     groups=groups)
+    top = sh.shards[-1]
+    assert top.n_rows > 0 and top.primary.n_rows == 0, \
+        "top range shard should hold only FD outliers"
+    rects = _rects(data)
+    _assert_flat_equal(sh, single, rects, tag="all-outlier-shard")
+    want = fullscan_expected(data, np.arange(data.shape[0]), rects)
+    got = sh.query_batch_split(rects)
+    for i in range(rects.shape[0]):
+        assert np.array_equal(got[i], want[i]), i
+
+
+def test_more_shards_than_rows(rng):
+    """K > n_rows: most shards are empty (bbox None -> always pruned),
+    some hold a single row; results still match the single index, and
+    writes into empty shards set their bbox."""
+    data = rng.uniform(0, 10, (5, 4)).astype(np.float32)
+    sh = ShardedCOAX(data, NOAUTO, n_shards=8, partition="hash")
+    single = COAXIndex(data, NOAUTO)
+    assert sum(n == 0 for n in sh.shard_sizes()) >= 3
+    rects = np.stack([full_rect(4), point_rect(data[0]),
+                      np.stack([data[1], np.nextafter(data[1], np.inf)], axis=-1)])
+    _assert_flat_equal(sh, single, rects, tag="K>n")
+    want = fullscan_expected(data, np.arange(5), rects)
+    got = sh.query_batch_split(rects)
+    for i in range(rects.shape[0]):
+        assert np.array_equal(got[i], want[i]), i
+
+    # delete everything, then insert through the empty plane
+    assert sh.delete(np.arange(5)) == 5
+    assert sh.n_rows == 0
+    q, r = sh.query_batch(rects)
+    assert q.size == 0 and r.size == 0
+    new_rows = rng.uniform(0, 10, (16, 4)).astype(np.float32)
+    ids = sh.insert(new_rows)
+    assert ids.tolist() == list(range(5, 21))
+    want = fullscan_expected(new_rows, ids, rects)
+    got = sh.query_batch_split(rects)
+    for i in range(rects.shape[0]):
+        assert np.array_equal(got[i], want[i]), i
+    assert_equiv(sh, rects, scratch=True, tag="K>n-after-writes")
+
+
+def test_shard_local_compaction_independence():
+    """Writes aimed at ONE range shard compact only that shard: other
+    shards' epochs (and frozen plans) stay untouched, results stay exact."""
+    name, ds, more = mutable_workloads(6_000)[0]
+    from repro.core import CoaxConfig
+    cfg = CoaxConfig(auto_compact=True, compact_min_delta=64,
+                     compact_delta_frac=0.01, drift_min_delta=10**9)
+    sh = ShardedCOAX(ds.data, cfg, n_shards=4, partition="range")
+    # rows drawn from the lowest partition-attribute quartile -> shard 0
+    col = ds.data[:, 0]
+    low_rows = ds.data[col < np.quantile(col.astype(np.float64), 0.1)][:600]
+    sh.insert(low_rows)
+    assert sh.shards[0].compactions >= 1, "target shard should have compacted"
+    assert all(s.compactions == 0 for s in sh.shards[1:]), \
+        "write-free shards must not compact"
+    rects = _rects(ds.data)
+    assert_equiv(sh, rects, scratch=True, tag="shard-local-compact")
+
+
+# --------------------------------------------------------------------- #
+# Engine plumbing: executor/server shards=K mode
+# --------------------------------------------------------------------- #
+def test_executor_shards_mode_and_rollups():
+    name, ds, more = mutable_workloads(6_000)[0]
+    rects = _rects(ds.data)
+    single = COAXIndex(ds.data, NOAUTO)
+    _apply_schedule(single, ds, more)
+    want = fullscan_expected(*single.live_rows(), rects)
+
+    # shards=K re-partitions a mutated single index over its live rows
+    ex = BatchQueryExecutor(single, max_batch=4, shards=4)
+    assert isinstance(ex.index, ShardedCOAX) and ex.index.n_shards == 4
+    got = ex.execute(rects)
+    for i in range(rects.shape[0]):
+        assert np.array_equal(got[i], want[i]), i
+    s = ex.stats()
+    assert s["shards"] == 4 and len(s["per_shard"]) == 4
+    # range pruning: some (query, shard) pairs were skipped
+    scattered = sum(p["queries"] for p in s["per_shard"])
+    assert 0 < scattered < s["queries"] * 4
+    assert sum(p["rows_scanned"] for p in s["per_shard"]) == s["rows_scanned"]
+    assert all(0 < w.shards_hit <= 4 for w in ex.wave_stats)
+
+    # an index that is already sharded passes through; mismatched K raises
+    ex2 = BatchQueryExecutor(ex.index, shards=4)
+    assert ex2.index is ex.index
+    with pytest.raises(ValueError):
+        BatchQueryExecutor(ex.index, shards=2)
+    from repro.core import FullScan
+    with pytest.raises(ValueError):
+        BatchQueryExecutor(FullScan(ds.data), shards=2)
+
+
+def test_from_index_preserves_id_high_water_mark():
+    """Re-sharding after the highest-id rows were deleted must NOT reuse
+    their ids: a reused id would alias a client's handle to a dead row,
+    and the 'ids == single-index ids for the same insert stream' contract
+    would break."""
+    name, ds, more = mutable_workloads(6_000)[2]
+    idx = COAXIndex(ds.data, NOAUTO)
+    new_ids = idx.insert(more(31, 10))
+    idx.delete(new_ids)                            # high-water ids all dead
+    sh = ShardedCOAX.from_index(idx, 2)
+    got = sh.insert(more(32, 3))
+    assert got.tolist() == idx.insert(more(32, 3)).tolist(), \
+        "sharded ids must continue the donor's sequence"
+    assert int(got.min()) > int(new_ids.max())
+
+
+def test_server_sharded_writes_and_stats():
+    """The server's write admission + per-wave snapshot semantics hold
+    unchanged over the sharded plane (writes route per shard at wave
+    boundaries)."""
+    name, ds, more = mutable_workloads(6_000)[0]
+    rects = _rects(ds.data, n=5)
+    srv = QueryServer(ShardedCOAX(ds.data, NOAUTO, n_shards=2), max_batch=4)
+    qids = srv.submit_many(rects)
+    w1 = srv.insert(more(11, 60))
+    w2 = srv.delete(np.arange(30))
+    res = srv.drain()
+    assert srv.write_results[w1].size == 60 and srv.write_results[w2] == 30
+    idx = srv.executor.index
+    want = fullscan_expected(*idx.live_rows(), rects)
+    for qid, w in zip(qids, want):
+        assert np.array_equal(res[qid], w)
+    s = srv.stats()
+    assert s["shards"] == 2 and s["rows_inserted"] == 60
+    assert s["delta_rows"] == idx.delta_rows
+
+
+def test_sharded_describe_and_footprint():
+    name, ds, _ = mutable_workloads(6_000)[0]
+    sh = ShardedCOAX(ds.data, NOAUTO, n_shards=3, partition="range")
+    d = sh.describe()
+    assert d["n_shards"] == 3 and sum(d["shard_sizes"]) == ds.data.shape[0]
+    assert len(d["shard_groups"]) == 3
+    assert d["memory_footprint_bytes"] >= sum(
+        s.memory_footprint() for s in sh.shards)
+    assert sh.memory_footprint() > 0
+    with pytest.raises(ValueError):
+        ShardedCOAX(ds.data, n_shards=0)

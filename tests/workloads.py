@@ -1,0 +1,141 @@
+"""Shared differential-test harness: ONE workload registry + ONE oracle.
+
+Every equivalence test in this repo (batch vs scalar, device vs numpy,
+mutated vs scratch rebuild, sharded vs single index) used to hand-roll its
+own synthetic workloads and oracle assertions; they all live here now so a
+new backend or plane (DESIGN.md §6's ``ShardedCOAX`` being the first) gets
+the full (workload × rect-shape × mutation-schedule) matrix by importing
+three helpers instead of copying them.
+
+Registry
+--------
+``engine_workloads()``   — the 4 read-path workloads (airline, osm,
+    generic_fd, and a no-outlier variant that exercises the empty outlier
+    grid + disabled bbox skip).
+``mutable_workloads()``  — 3 workloads paired with a ``more(seed, m)``
+    generator producing fresh in-pattern rows for insert schedules.
+``rects_for(data)``      — the standard rect mix: knn rects + full-range +
+    far-out-of-range + point (empty-result) + half-open (±inf bounds).
+``violate_fd(ds, rows)`` — break the workload's first FD group on a copy
+    (drives outlier-delta and drift paths).
+
+Oracles
+-------
+``fullscan_expected(rows, ids, rects)`` — ground-truth sorted hit ids per
+    rect from a brute-force scan of an explicit row set.
+``assert_equiv(idx, rects, ...)`` — THE differential assertion: the index's
+    scalar and batched answers must equal the FullScan ground truth over its
+    own ``live_rows()``; optionally also a rebuild-from-scratch ``COAXIndex``
+    over that row set, and the device backend's batched answers.
+"""
+import numpy as np
+import pytest
+
+from repro.core import COAXIndex, CoaxConfig, FullScan, full_rect, point_rect
+from repro.data import knn_rect_queries, make_airline, make_generic_fd, make_osm
+from repro.engine import split_hits
+
+NOAUTO = CoaxConfig(auto_compact=False)
+
+
+_ENGINE_WORKLOADS = {
+    "airline": lambda: make_airline(20_000, seed=3),
+    "osm": lambda: make_osm(20_000, seed=3),
+    "generic_fd": lambda: make_generic_fd(15_000, 5, ((0, 1), (2, 3)), seed=7),
+    "generic_no_outliers":
+        lambda: make_generic_fd(15_000, 4, ((0, 1),), outlier_frac=0.0, seed=11),
+}
+
+
+def engine_workloads():
+    """(name, Dataset) pairs for read-path equivalence matrices."""
+    return [(name, build()) for name, build in _ENGINE_WORKLOADS.items()]
+
+
+def engine_workload(name):
+    """Build ONE registry workload by name (skips the other datasets)."""
+    return _ENGINE_WORKLOADS[name]()
+
+
+def mutable_workloads(n_rows: int = 12_000):
+    """(name, Dataset, more) triples; ``more(seed, m)`` yields m fresh rows
+    following the same generative pattern, for insert schedules."""
+    return [
+        ("airline", make_airline(n_rows, seed=3),
+         lambda s, m: make_airline(m, seed=s).data),
+        ("osm", make_osm(n_rows, seed=3),
+         lambda s, m: make_osm(m, seed=s).data),
+        ("generic_fd",
+         make_generic_fd(max(n_rows - 2_000, 1_000), 5, ((0, 1), (2, 3)), seed=7),
+         lambda s, m: make_generic_fd(m, 5, ((0, 1), (2, 3)), seed=s).data),
+    ]
+
+
+def rects_for(data, n=24, seed=0, extremes=True, sample_cap=10_000):
+    """The standard rect mix every equivalence matrix runs.
+
+    knn rects around sampled rows, a full-range rect, a far-out-of-range
+    rect (``extremes``; exercises f32 overflow rounding), a point rect on
+    row 0 (usually empty under half-open semantics), and a half-open rect
+    with ±inf bounds.
+    """
+    d = data.shape[1]
+    rects = list(knn_rect_queries(data, n, 64, seed=seed, sample_cap=sample_cap))
+    rects.append(full_rect(d))                            # full-range rect
+    if extremes:
+        rects.append(np.stack([np.full(d, 1e12), np.full(d, 1e12 + 1)], axis=-1))
+    rects.append(point_rect(data[0]))                     # empty-result rect
+    lop = np.full(d, -np.inf)
+    lop[0] = float(np.median(data[:, 0]))
+    rects.append(np.stack([lop, np.full(d, np.inf)], axis=-1))  # half-open
+    return np.stack(rects)
+
+
+def violate_fd(ds, rows):
+    """Break the workload's first FD group on a copy of ``rows`` (inserts
+    built from this land in the outlier delta and drag the drift tracker)."""
+    rows = rows.copy()
+    dep = ds.correlated_groups[0][1]
+    rows[:, dep] = rows[:, dep] * 3.0 + 1000.0
+    return rows
+
+
+# --------------------------------------------------------------------- #
+# Oracles
+# --------------------------------------------------------------------- #
+def fullscan_expected(rows, ids, rects):
+    """Ground truth: sorted original-id hits per rect, by brute-force scan
+    of the explicit (rows, ids) set."""
+    ids = np.asarray(ids, dtype=np.int64)
+    fs = FullScan(rows)
+    return [np.sort(ids[fs.query(r)]) for r in rects]
+
+
+def assert_equiv(idx, rects, device=False, scratch=True, tag=""):
+    """idx's scalar + batched answers == FullScan ground truth over its own
+    live rows; optionally == a scratch-rebuilt ``COAXIndex`` (original ids
+    preserved) and == the device backend's batched answers.
+
+    Works for any engine with the ``COAXIndex`` serving surface (``query``,
+    ``query_batch_split``, ``live_rows``), including ``ShardedCOAX``.
+    """
+    rows, ids = idx.live_rows()
+    want = fullscan_expected(rows, ids, rects)
+    batch = idx.query_batch_split(rects)
+    for i, r in enumerate(rects):
+        assert np.array_equal(idx.query(r), want[i]), (tag, "scalar", i)
+        assert np.array_equal(batch[i], want[i]), (tag, "batch", i)
+    if scratch:
+        fresh = COAXIndex(rows, NOAUTO, row_ids=ids)
+        for i, r in enumerate(rects):
+            assert np.array_equal(fresh.query(r), want[i]), (tag, "scratch", i)
+    if device:
+        pytest.importorskip("jax")
+        bk = idx.backend
+        idx.backend = "device"
+        qd, rd = idx.query_batch(rects)
+        idx.backend = bk
+        dev = split_hits(qd, rd, rects.shape[0])
+        for i in range(rects.shape[0]):
+            assert np.array_equal(dev[i], want[i]), (tag, "device", i)
+    return want
