@@ -19,10 +19,14 @@ relearns fire), emitted to ``BENCH_updates.json``.
 ``ShardedCOAX`` per shard count, range-partitioned, served through the
 executor's sharded mode — per-K QPS, pruning rate and per-shard work merge
 into the ``sharded`` section of ``BENCH_queries.json``.
+``--recover`` drives the durability plane (DESIGN.md §7): snapshot size
+and save latency, then recovery time as a function of WAL length (the
+replay tail), emitted to ``BENCH_storage.json``.
 ``--smoke`` shrinks the sweep and turns the throughput/agreement checks
 into hard assertions for CI — for ``--mixed`` the gate is hit agreement
 between the mutated index and a rebuild-from-scratch oracle, for
-``--shards`` it is cross-shard vs single-index hit agreement.
+``--shards`` it is cross-shard vs single-index hit agreement, for
+``--recover`` it is recovered-vs-live hit agreement at every WAL length.
 """
 from __future__ import annotations
 
@@ -376,6 +380,102 @@ def run_mixed(rows: int = 50_000, n_queries: int = 192,
     return result
 
 
+def run_recover(rows: int = 100_000, n_queries: int = 128,
+                wal_lengths=(0, 64, 256, 1024), out_path: str = None,
+                smoke: bool = False) -> dict:
+    """Durability mode (DESIGN.md §7): cost of the crash-safety plane.
+
+    One airline-rows ``COAXIndex`` is journaled into a scratch directory;
+    reported: full-state snapshot bytes vs raw data bytes, (atomic) save
+    latency, cold restore latency at WAL length 0, then — for each WAL
+    length W — the recovery time of a crash after W journaled write ops
+    (every 4th op a delete, every 8th an FD-violating insert burst, 32 rows
+    per insert) and the replayed-record count.  Every recovery is gated on
+    flat-hit agreement with the never-crashed index (``smoke`` keeps the
+    gate and shrinks the sweep).  Results land in the ``recover`` section
+    of ``BENCH_storage.json``; other sections are merge-preserved.
+    """
+    import shutil
+    import tempfile
+
+    from repro.storage import read_manifest, restore, snapshot_nbytes
+
+    if smoke:
+        wal_lengths = tuple(w for w in wal_lengths if w <= 256) or (0, 64)
+    ds = dataset("airline", rows * 2)            # second half = insert pool
+    base = np.ascontiguousarray(ds.data[:rows])
+    pool = ds.data[rows:].copy()
+    rects = np.asarray(queries("airline", rows, n_queries, PCFG.knn_k))
+    result = {"dataset": "airline", "rows": rows, "n_queries": len(rects),
+              "data_bytes": int(base.nbytes), "wal": {}}
+
+    idx = COAXIndex(base, CoaxConfig(auto_compact=False))
+    live_hits = idx.query_batch_split(rects)
+    workdir = Path(tempfile.mkdtemp(prefix="bench_recover_"))
+    try:
+        t0 = time.perf_counter()
+        snap = idx.save(workdir / "cold")
+        result["save_s"] = time.perf_counter() - t0
+        result["snapshot_bytes"] = snapshot_nbytes(snap)
+        emit("recover/airline/save_s", result["save_s"],
+             f"snapshot={result['snapshot_bytes']}B,"
+             f"data={result['data_bytes']}B")
+        t0 = time.perf_counter()
+        cold = restore(workdir / "cold")
+        result["restore_cold_s"] = time.perf_counter() - t0
+        emit("recover/airline/restore_cold_s", result["restore_cold_s"],
+             "warm restart, zero-length WAL")
+        assert all(np.array_equal(g, w) for g, w in
+                   zip(cold.query_batch_split(rects), live_hits)), \
+            "cold restore disagrees with live index"
+
+        for w in wal_lengths:
+            d = workdir / f"wal_{w}"
+            vic = COAXIndex(base, CoaxConfig(auto_compact=False))
+            vic.attach_durability(d)
+            rng = np.random.default_rng(PCFG.seed)
+            pos = 0
+            for op in range(w):
+                if op % 4 == 3:
+                    vic.delete(rng.integers(0, rows, 16))
+                else:
+                    rows_in = pool[pos:pos + 32].copy()
+                    pos = (pos + 32) % max(len(pool) - 32, 1)
+                    if op % 8 == 6:
+                        rows_in[:, 1] = rows_in[:, 1] * 3.0 + 500.0
+                    vic.insert(rows_in)
+            vic.durable.sync()
+            want = vic.query_batch_split(rects)
+            wal_bytes = vic.durable.describe()["wal_bytes"]
+            del vic                               # crash
+            t0 = time.perf_counter()
+            rec = restore(d, durable=True)
+            dt = time.perf_counter() - t0
+            assert all(np.array_equal(g, x) for g, x in
+                       zip(rec.query_batch_split(rects), want)), \
+                f"recovery disagrees with live index at WAL length {w}"
+            result["wal"][str(w)] = {
+                "recovery_s": dt, "wal_bytes": int(wal_bytes),
+                "replayed": int(rec.durable.wal.next_seq),
+            }
+            emit(f"recover/airline/recovery_s@wal{w}", dt,
+                 f"wal_bytes={wal_bytes},agreement=ok")
+        if smoke:
+            emit("recover/airline/smoke", 1.0,
+                 f"recovered==live at WAL lengths {list(wal_lengths)} "
+                 f"({len(rects)} rects)")
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+
+    out = Path(out_path) if out_path else \
+        Path(__file__).resolve().parents[1] / "BENCH_storage.json"
+    merged = _read_bench_json(out)
+    merged["recover"] = result
+    out.write_text(json.dumps(merged, indent=2) + "\n")
+    print(f"BENCH {json.dumps(result)}")
+    return result
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--batch", action="store_true",
@@ -385,6 +485,9 @@ if __name__ == "__main__":
     ap.add_argument("--shards", type=str, default=None, metavar="K[,K...]",
                     help="sharded mode: scatter-gather scaling sweep over "
                          "these shard counts (DESIGN.md §6)")
+    ap.add_argument("--recover", action="store_true",
+                    help="durability mode: snapshot/save/recovery costs + "
+                         "BENCH_storage.json (DESIGN.md §7)")
     ap.add_argument("--backend", choices=("numpy", "device", "both"),
                     default="both", help="which query_batch backend(s) to sweep")
     ap.add_argument("--smoke", action="store_true",
@@ -392,7 +495,11 @@ if __name__ == "__main__":
     ap.add_argument("--rows", type=int, default=None)
     ap.add_argument("--queries", type=int, default=None)
     args = ap.parse_args()
-    if args.shards:
+    if args.recover:
+        run_recover(rows=args.rows or 100_000,
+                    n_queries=args.queries or (64 if args.smoke else 128),
+                    smoke=args.smoke)
+    elif args.shards:
         counts = tuple(int(k) for k in args.shards.split(","))
         run_sharded(rows=args.rows or 100_000,
                     n_queries=args.queries or (64 if args.smoke else 256),

@@ -27,6 +27,15 @@ adjust our existing model').  ``compact()`` merges deltas into rebuilt
 snapshots and bumps the epoch; it fires automatically on delta size, or on
 drift when the §7.2 predictability ratio (``theory.met_drifted_expectation``)
 says the frozen slopes have decayed.
+
+Durability (DESIGN.md §7): ``attach_durability`` hooks a ``storage``
+durability plane onto the write path — every ``insert``/``delete`` appends
+one frame to an epoch-stamped write-ahead log before mutating memory, and
+``compact`` rotates the log under a fresh epoch snapshot.  ``save`` writes
+a one-shot full-state snapshot (delta planes and drift trackers included);
+``restore`` loads the newest complete snapshot and replays the WAL tail
+through these same write paths, yielding an index bit-identical to the
+never-crashed one on every backend.
 """
 from __future__ import annotations
 
@@ -101,6 +110,7 @@ class COAXIndex:
         self.keep_dims = reduced_dims(self.n_dims, self.groups)
         self._device_opts = device_opts
         self.last_batch_stats = BatchStats()
+        self.durable = None             # storage.Durability, via attach_durability
         self._fit()
         self.backend = backend
 
@@ -253,6 +263,8 @@ class COAXIndex:
                 self._next_id = max(self._next_id, int(ids.max()) + 1)
         if m == 0:
             return ids
+        if self.durable is not None:    # WAL before memory (DESIGN.md §7.2)
+            self.durable.log_insert(rows, ids)
         inlier = np.ones(m, dtype=bool)
         for g in self.groups:
             inlier &= g.inlier_mask(rows)
@@ -277,6 +289,8 @@ class COAXIndex:
         ids = np.unique(np.asarray(row_ids, dtype=np.int64).reshape(-1))
         if ids.size == 0:
             return 0
+        if self.durable is not None:    # WAL before memory (DESIGN.md §7.2)
+            self.durable.log_delete(ids)
         removed = 0
         absorbed = self.delta_primary.tombstone_log(ids)
         removed += int(absorbed.sum())
@@ -380,6 +394,9 @@ class COAXIndex:
         self.compactions += 1
         self._fit()
         self.backend = bk
+        if self.durable is not None:
+            # new epoch snapshot + WAL rotation — the §7.5 truncation point
+            self.durable.on_compact(self)
         return {"epoch": self.epoch, "rows": int(self.data.shape[0]),
                 "relearned": relearned}
 
@@ -387,6 +404,135 @@ class COAXIndex:
         """Tombstoned ids across both planes (for masking snapshot hits)."""
         return np.concatenate([self.delta_primary.dead_ids(),
                                self.delta_outlier.dead_ids()])
+
+    # ------------------------------------------------------------------ #
+    # Durability (DESIGN.md §7): full-state capture, save/restore
+    # ------------------------------------------------------------------ #
+    def _tracker_keys(self) -> List[Tuple[int, int]]:
+        """(group index, dependent) pairs in the canonical (frozen) order —
+        the serialisation order of tracker sufficient statistics."""
+        return [(gi, dep) for gi, g in enumerate(self.groups)
+                for dep in g.dependents]
+
+    def _snapshot_state(self) -> dict:
+        """Everything ``_restore_state`` needs to resurrect this exact
+        index: epoch arrays in their exact order (the order feeds the next
+        compaction's sampling rng, so it is part of bit-identity), both
+        grid states, FD groups/margins, outlier bbox, live delta planes and
+        the Bayesian drift trackers' sufficient statistics."""
+        keys = self._tracker_keys()
+        return {
+            "data": self.data,
+            "row_ids": self.row_ids,
+            "next_id": self._next_id,
+            "epoch": self.epoch,
+            "compactions": self.compactions,
+            "primary_ratio": self.primary_ratio,
+            "config": self.config,
+            "groups": self.groups,
+            "primary": self.primary.state_dict(),
+            "outlier": self.outlier.state_dict(),
+            "outlier_lo": self._outlier_lo,
+            "outlier_hi": self._outlier_hi,
+            "delta_primary": self.delta_primary.state_dict(),
+            "delta_outlier": self.delta_outlier.state_dict(),
+            "tracker_xtx": (np.stack([self._fd_trackers[k].xtx for k in keys])
+                            if keys else np.empty((0, 2, 2))),
+            "tracker_xty": (np.stack([self._fd_trackers[k].xty for k in keys])
+                            if keys else np.empty((0, 2))),
+            "tracker_lam": np.asarray(
+                [self._fd_trackers[k].lam for k in keys], np.float64),
+            "x_scale": np.asarray(
+                [self._x_scale[gi] for gi in range(len(self.groups))], np.float64),
+        }
+
+    @classmethod
+    def _restore_state(cls, state: dict, backend: str = "numpy",
+                       device_opts: Optional[dict] = None) -> "COAXIndex":
+        """Rebuild an index from ``_snapshot_state`` output WITHOUT
+        refitting: grids, trackers and delta planes come back verbatim, so
+        a warm restart costs deserialisation, not a relearn (DESIGN.md §7.3).
+        Bit-identity contract: every query on any backend, and every future
+        write/compaction decision, behaves exactly as the saved index
+        would have."""
+        idx = cls.__new__(cls)
+        idx.config = state["config"]
+        idx.data = np.ascontiguousarray(state["data"], dtype=np.float32)
+        idx.n_dims = idx.data.shape[1]
+        idx.row_ids = np.asarray(state["row_ids"], dtype=np.int64)
+        idx._next_id = int(state["next_id"])
+        idx.epoch = int(state["epoch"])
+        idx.compactions = int(state["compactions"])
+        idx.primary_ratio = float(state["primary_ratio"])
+        idx.groups = list(state["groups"])
+        idx.keep_dims = reduced_dims(idx.n_dims, idx.groups)
+        idx._device_opts = device_opts
+        idx.last_batch_stats = BatchStats()
+        idx.durable = None
+        idx.primary = GridFile.from_state(state["primary"],
+                                          device_opts=device_opts)
+        idx.outlier = GridFile.from_state(state["outlier"],
+                                          device_opts=device_opts)
+        idx._outlier_lo = state["outlier_lo"]
+        idx._outlier_hi = state["outlier_hi"]
+        idx._base_primary_ids = np.sort(idx.primary.row_ids)
+        idx._base_outlier_ids = np.sort(idx.outlier.row_ids)
+        idx.delta_primary = DeltaPlane.from_state(idx.n_dims,
+                                                  state["delta_primary"])
+        idx.delta_outlier = DeltaPlane.from_state(idx.n_dims,
+                                                  state["delta_outlier"])
+        keys = idx._tracker_keys()
+        xtx, xty = state["tracker_xtx"], state["tracker_xty"]
+        lam = state["tracker_lam"]
+        idx._fd_trackers = {
+            k: BayesianLinearModel(np.array(xtx[i], np.float64),
+                                   np.array(xty[i], np.float64),
+                                   float(lam[i]))
+            for i, k in enumerate(keys)
+        }
+        idx._x_scale = {gi: float(s) for gi, s in enumerate(state["x_scale"])}
+        idx.backend = backend
+        return idx
+
+    def save(self, directory, keep: Optional[int] = None):
+        """One-shot full-state snapshot into ``directory`` (atomic staged
+        rename; newest-complete wins at restore).  Returns the snapshot
+        path.  Saving into the attached durability directory routes through
+        ``Durability.checkpoint`` so the snapshot's ``wal_seq`` stays
+        consistent with the journal; any other target gets a self-contained
+        snapshot (the cold-start-replica / shard-migration artifact)."""
+        from pathlib import Path
+        from ..storage import write_snapshot
+        if (self.durable is not None
+                and Path(directory).resolve() == self.durable.directory.resolve()):
+            return self.durable.checkpoint(keep=keep)
+        return write_snapshot(self, directory, keep=keep)
+
+    @classmethod
+    def restore(cls, directory, backend: str = "numpy",
+                device_opts: Optional[dict] = None,
+                durable: bool = False) -> "COAXIndex":
+        """Load the newest complete snapshot under ``directory`` and replay
+        the matching WAL tail; ``durable=True`` re-attaches the durability
+        plane so the recovered index keeps journaling where the crashed one
+        stopped.  See ``repro.storage.restore``."""
+        from ..storage import restore as _restore
+        idx = _restore(directory, backend=backend, device_opts=device_opts,
+                       durable=durable)
+        if not isinstance(idx, cls):
+            raise TypeError(f"{directory} holds a {type(idx).__name__} "
+                            f"snapshot, not {cls.__name__}")
+        return idx
+
+    def attach_durability(self, directory, keep: int = 3,
+                          sync_every_op: bool = False) -> "COAXIndex":
+        """Start journaling this index's writes under ``directory``: writes
+        the current epoch snapshot if missing and opens the epoch's WAL.
+        Returns self."""
+        from ..storage import Durability
+        Durability.attach(self, directory, keep=keep,
+                          sync_every_op=sync_every_op)
+        return self
 
     # ------------------------------------------------------------------ #
     def translate(self, rect: Rect) -> np.ndarray:
@@ -486,14 +632,19 @@ class COAXIndex:
     def memory_footprint(self) -> int:
         """Bytes actually held beyond the snapshot payload: both grid
         directories, the soft-FD model parameters, the live drift trackers,
-        the §8.2.3 outlier bbox arrays, and the delta structures."""
+        the §8.2.3 outlier bbox arrays, the delta structures, and — when a
+        durability plane is attached — the WAL tail appended but not yet
+        fsynced (page-cache resident until the wave-boundary sync, §7.2)."""
         model_bytes = sum(len(g.dependents) * 4 * 8 + 8 for g in self.groups)
         tracker_bytes = len(self._fd_trackers) * 7 * 8     # xtx(4)+xty(2)+lam
         bbox_bytes = (self._outlier_lo.nbytes + self._outlier_hi.nbytes
                       if self._outlier_lo is not None else 0)
         delta_bytes = self.delta_primary.nbytes() + self.delta_outlier.nbytes()
+        wal_pending = (self.durable.wal_pending_bytes
+                       if self.durable is not None else 0)
         return (self.primary.memory_footprint() + self.outlier.memory_footprint()
-                + model_bytes + tracker_bytes + bbox_bytes + delta_bytes)
+                + model_bytes + tracker_bytes + bbox_bytes + delta_bytes
+                + wal_pending)
 
     def describe(self) -> dict:
         return {
@@ -525,4 +676,6 @@ class COAXIndex:
             "outlier_bbox_bytes": (self._outlier_lo.nbytes + self._outlier_hi.nbytes
                                    if self._outlier_lo is not None else 0),
             "memory_footprint_bytes": self.memory_footprint(),
+            "durability": (self.durable.describe()
+                           if self.durable is not None else None),
         }

@@ -25,6 +25,14 @@ provably equivalent, see ``gridfile.f32_ceil``).  A row therefore hits in
 the delta iff it would hit after being compacted into a snapshot, and the
 union  (snapshot hits − tombstones) ∪ (live log hits)  equals a scratch
 rebuild from the final row set, bit for bit, on every backend.
+
+Durability (DESIGN.md §7): the plane is exactly the state the write-ahead
+log reconstructs — ``storage.wal`` records one frame per ``COAXIndex``
+insert/delete call, and replaying them through the ordinary write paths
+refills these logs and tombstone sets bit for bit.  ``state_dict`` /
+``from_state`` additionally let a mid-epoch snapshot (``COAXIndex.save``)
+carry the plane directly, so restore cost is bounded by the WAL tail, not
+the epoch's whole write history.
 """
 from __future__ import annotations
 
@@ -190,6 +198,35 @@ class DeltaPlane:
             np.logical_and(hit, v[None, :] < rects[:, j, 1][:, None], out=hit)
         qids, pos = np.nonzero(hit)
         return qids.astype(np.int64), ids[pos]
+
+    # ------------------------------------------------------------------ #
+    def state_dict(self) -> dict:
+        """Serializable state: the append log (dead rows included, order
+        preserved), the tombstone set and the split counters."""
+        return {
+            "rows": self._log_rows(),
+            "ids": self.log_ids(),
+            "dead": self.dead_ids(),
+            "n_log_dead": self.n_log_dead,
+            "n_base_dead": self.n_base_dead,
+        }
+
+    @classmethod
+    def from_state(cls, n_dims: int, state: dict) -> "DeltaPlane":
+        """Rebuild a plane from ``state_dict`` output.  The log lands as a
+        single chunk — chunk granularity is a cache detail, every query and
+        compaction path sees the concatenated log either way."""
+        dp = cls(n_dims)
+        rows = np.ascontiguousarray(state["rows"], dtype=np.float32)
+        ids = np.asarray(state["ids"], dtype=np.int64)
+        if rows.shape[0]:
+            dp._chunks.append(rows.reshape(-1, n_dims))
+            dp._id_chunks.append(ids)
+        dp.n_log = int(ids.shape[0])
+        dp._dead = set(np.asarray(state["dead"], dtype=np.int64).tolist())
+        dp.n_log_dead = int(state["n_log_dead"])
+        dp.n_base_dead = int(state["n_base_dead"])
+        return dp
 
     # ------------------------------------------------------------------ #
     def nbytes(self) -> int:

@@ -260,6 +260,66 @@ class GridFile:
         self.backend = backend
 
     # ------------------------------------------------------------------ #
+    def state_dict(self) -> dict:
+        """Snapshot state (DESIGN.md §7.3): the cell-ordered row block, ids,
+        directory and build parameters — everything ``from_state`` needs to
+        resurrect this exact epoch without re-sorting or re-quantiling.
+        Arrays are the live ones (callers serialise; ``np.savez`` copies)."""
+        return {
+            "rows": self.rows,
+            "row_ids": self.row_ids,
+            "offsets": self.offsets,
+            "inner_edges": (np.stack(self.inner_edges) if self.inner_edges
+                            else np.empty((0, max(self.cells_per_dim - 1, 0)),
+                                          np.float64)),
+            "meta": {
+                "d_full": self.d_full,
+                "index_dims": self.index_dims,
+                "cells_per_dim": self.cells_per_dim,
+                "sort_dim": self.sort_dim,
+                "quantile": self.quantile,
+                "epoch": self.epoch,
+            },
+        }
+
+    @classmethod
+    def from_state(cls, state: dict, backend: str = "numpy",
+                   device_opts: Optional[dict] = None) -> "GridFile":
+        """Rebuild a frozen grid file from ``state_dict`` output, bypassing
+        the sort/quantile build — the warm-restart path (DESIGN.md §7.3).
+        The restored instance is bit-identical to the saved one in every
+        query-visible respect; its device plan is rebuilt lazily on first
+        device wave, exactly like a post-compaction epoch."""
+        meta = state["meta"]
+        gf = cls.__new__(cls)
+        gf.epoch = int(meta["epoch"])
+        gf.rows = np.ascontiguousarray(state["rows"], dtype=np.float32)
+        gf.n_rows = gf.rows.shape[0]
+        gf.d_full = int(meta["d_full"])
+        gf.index_dims = [int(d) for d in meta["index_dims"]]
+        gf.sort_dim = None if meta["sort_dim"] is None else int(meta["sort_dim"])
+        gf.grid_dims = [d for d in gf.index_dims if d != gf.sort_dim]
+        gf.cells_per_dim = int(meta["cells_per_dim"])
+        gf.quantile = bool(meta["quantile"])
+        edges = np.asarray(state["inner_edges"], dtype=np.float64)
+        gf.inner_edges = [np.ascontiguousarray(edges[i])
+                          for i in range(len(gf.grid_dims))]
+        gf.row_ids = np.asarray(state["row_ids"], dtype=np.int64)
+        gf.offsets = np.asarray(state["offsets"], dtype=np.int64)
+        gf.sort_vals = (np.ascontiguousarray(gf.rows[:, gf.sort_dim])
+                        if gf.sort_dim is not None else None)
+        gf._sort_finite = bool(
+            np.isfinite(gf.sort_vals).all()) if gf.sort_vals is not None else True
+        gf._rows_finite = bool(np.isfinite(gf.rows).all()) if gf.n_rows else True
+        gf.last_query_stats = _QueryStats()
+        gf.last_batch_stats = BatchStats()
+        gf.device_opts = device_opts
+        gf._device_plan = None
+        gf._device_plan_failed = False
+        gf.backend = backend
+        return gf
+
+    # ------------------------------------------------------------------ #
     @property
     def backend(self) -> str:
         return self._backend

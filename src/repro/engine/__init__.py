@@ -11,8 +11,11 @@ flushed at wave boundaries so every wave sees one snapshot+delta state.
 behind one scatter-gather plane, each with its own FDs, delta and epochs.
 
 ``BatchQueryExecutor`` — wave-sliced ``query_batch`` driver with per-wave stats
-``QueryServer``        — submit rects/writes, drain in priority/FIFO waves
-``ShardedCOAX``        — sharded scatter-gather serving plane (§6)
+``QueryServer``        — submit rects/writes, drain in priority/FIFO waves;
+                         wave-boundary WAL fsync + checkpoint cadence and the
+                         ``recover()`` restart constructor (§7)
+``ShardedCOAX``        — sharded scatter-gather serving plane (§6); journals
+                         per shard via ``repro.storage`` (§7.6)
 ``DevicePlan``         — frozen device-resident serving plane (§4); imported
                          lazily so the numpy engine works without jax
 """

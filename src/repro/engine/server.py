@@ -13,6 +13,13 @@ query pool; ``drain`` applies every queued write at each wave boundary
 wave answer against the same snapshot+delta state — per-wave snapshot
 semantics.  A query admitted before a write but drained after it observes
 the write; two queries in the same wave can never observe different states.
+
+Durability (DESIGN.md §7): when the index carries a durability plane, the
+server fsyncs its WAL right after each wave-boundary flush — the durable
+frontier advances in the same per-wave steps as the visibility frontier
+(§7.2 fsync contract) — and every ``checkpoint_every`` waves it publishes
+a mid-epoch snapshot to bound replay cost.  ``QueryServer.recover`` is the
+restart constructor: snapshot + WAL replay, then serve.
 """
 from __future__ import annotations
 
@@ -49,14 +56,20 @@ class QueryServer:
     shards : forwarded to ``BatchQueryExecutor`` — ``K`` serves waves from a
         K-shard scatter-gather plane (DESIGN.md §6), re-partitioning a
         single mutable index when needed; stats gain per-shard rollups.
+    checkpoint_every : publish a durability checkpoint (mid-epoch snapshot
+        stamped with the journal position, DESIGN.md §7) every this many
+        drained waves; None disables the cadence.  No-op unless the index
+        has a durability plane attached.
     """
 
     def __init__(self, index, max_batch: int = 64,
                  executor: Optional[BatchQueryExecutor] = None,
                  backend: Optional[str] = None,
-                 shards: Optional[int] = None):
+                 shards: Optional[int] = None,
+                 checkpoint_every: Optional[int] = None):
         self.executor = executor or BatchQueryExecutor(
             index, max_batch=max_batch, backend=backend, shards=shards)
+        self.checkpoint_every = checkpoint_every
         self._pending: Dict[int, PendingQuery] = {}
         self._ids = itertools.count()
         self._write_queue: List[Tuple[int, str, object]] = []
@@ -66,6 +79,25 @@ class QueryServer:
         self.writes_applied = 0
         self.rows_inserted = 0
         self.rows_deleted = 0
+        self.checkpoints_written = 0
+
+    # ------------------------------------------------------------------ #
+    @classmethod
+    def recover(cls, directory, max_batch: int = 64,
+                backend: Optional[str] = None,
+                shards: Optional[int] = None,
+                checkpoint_every: Optional[int] = None,
+                durable: bool = True, **restore_kwargs) -> "QueryServer":
+        """Restart constructor (DESIGN.md §7.4): recover the index from a
+        durability directory — newest complete snapshot + WAL-tail replay,
+        single or sharded, sniffed from the layout — and serve it.  With
+        ``durable`` (default) the recovered index resumes journaling where
+        the crashed process stopped."""
+        from ..storage import restore
+        index = restore(directory, backend=backend or "numpy",
+                        durable=durable, **restore_kwargs)
+        return cls(index, max_batch=max_batch, backend=backend,
+                   shards=shards, checkpoint_every=checkpoint_every)
 
     # ------------------------------------------------------------------ #
     def submit(self, rect: np.ndarray, priority: float = 0.0,
@@ -145,7 +177,9 @@ class QueryServer:
         Returns {query_id: sorted row ids} for every query answered.  Wave
         formation is priority-then-FIFO, like the router's admission sort.
         Queued writes are flushed at every wave boundary, so each wave
-        observes one consistent index state (per-wave snapshot semantics).
+        observes one consistent index state (per-wave snapshot semantics);
+        a durability plane, if attached, fsyncs its WAL at the same
+        boundary — the log and the wave agree on what happened (§7.2).
         """
         results: Dict[int, np.ndarray] = {}
         width = self.executor.max_batch
@@ -154,6 +188,9 @@ class QueryServer:
             if max_waves is not None and waves_this_call >= max_waves:
                 break
             self.flush_writes()
+            dur = getattr(self.executor.index, "durable", None)
+            if dur is not None:
+                dur.sync()
             if not self._pending:
                 break
             cands = sorted(self._pending.values(),
@@ -166,6 +203,10 @@ class QueryServer:
                 del self._pending[q.qid]
             self.waves_drained += 1
             waves_this_call += 1
+            if (dur is not None and self.checkpoint_every
+                    and self.waves_drained % self.checkpoint_every == 0):
+                dur.checkpoint()
+                self.checkpoints_written += 1
         return results
 
     # ------------------------------------------------------------------ #
@@ -186,5 +227,15 @@ class QueryServer:
             compactions=int(getattr(index, "compactions", 0)),
             delta_rows=int(getattr(index, "delta_rows", 0)),
             tombstones=int(getattr(index, "tombstone_count", 0)),
+            checkpoints_written=self.checkpoints_written,
         )
+        dur = getattr(index, "durable", None)
+        if dur is not None:
+            d = dur.describe()
+            s.update(
+                wal_records=d["wal_records"],
+                wal_bytes=d["wal_bytes"],
+                wal_pending_bytes=d["wal_pending_bytes"],
+                last_snapshot_bytes=d["last_snapshot_bytes"],
+            )
         return s

@@ -140,6 +140,7 @@ class ShardedCOAX:
         self.last_batch_stats = BatchStats()
         self.last_shard_stats: List[BatchStats] = [BatchStats()
                                                    for _ in self.shards]
+        self.durable = None     # storage.ShardedDurability, via attach_durability
         self.backend = backend
 
     # ------------------------------------------------------------------ #
@@ -148,7 +149,18 @@ class ShardedCOAX:
                    partition: str = "range", partition_dim: int = 0,
                    ) -> "ShardedCOAX":
         """Re-shard an existing (possibly mutated) index: partition its
-        live row set, keeping original ids, config and backend."""
+        live row set, keeping original ids, config and backend.
+
+        A journaled donor is refused: the new plane would start with
+        ``durable=None`` while the donor's single-index snapshot+WAL sat
+        stale on disk, so every acknowledged write after the re-partition
+        would silently vanish at the next recovery.  Save the donor to a
+        fresh directory and re-attach the sharded plane explicitly."""
+        if getattr(index, "durable", None) is not None:
+            raise ValueError(
+                "cannot re-partition a journaled index: its durability "
+                "history would be silently forked; detach/save first and "
+                "attach_durability on the sharded plane")
         rows, ids = index.live_rows()
         out = cls(rows, index.config, n_shards=n_shards,
                   partition=partition, partition_dim=partition_dim,
@@ -159,6 +171,88 @@ class ShardedCOAX:
         # alias a client's handle to a dead row
         out._next_id = max(out._next_id, int(getattr(index, "_next_id", 0)))
         return out
+
+    # ------------------------------------------------------------------ #
+    # Durability (DESIGN.md §7.6)
+    # ------------------------------------------------------------------ #
+    @classmethod
+    def _restore_parts(cls, spec: dict, shards: List[COAXIndex],
+                       backend: str = "numpy") -> "ShardedCOAX":
+        """Assemble a plane from a recovered partitioner spec + per-shard
+        recovered indexes (``storage.durability._restore_sharded``).
+
+        Shard bboxes are recomputed from each shard's live rows — tighter
+        than the crashed plane's widen-only boxes is fine, because a bbox
+        only gates PRUNING and every live row stays covered (conservative
+        over-approximation, §6).  The global id sequence resumes at the max
+        of the spec's checkpointed high-water mark and every shard's
+        recovered ``_next_id`` (each insert journaled its assigned ids into
+        its shard, so the max never understates the crashed sequence)."""
+        out = cls.__new__(cls)
+        out.n_dims = int(spec["n_dims"])
+        out.n_shards = int(spec["n_shards"])
+        out.partition = spec["partition"]
+        out.partition_dim = int(spec["partition_dim"])
+        out.config = shards[0].config if shards else None
+        out._boundaries = (None if spec["boundaries"] is None
+                           else np.asarray(spec["boundaries"], np.float64))
+        out.shards = list(shards)
+        out._shard_lo, out._shard_hi = [], []
+        for s in out.shards:
+            rows, _ = s.live_rows()
+            if rows.shape[0]:
+                out._shard_lo.append(rows.min(axis=0).astype(np.float64))
+                out._shard_hi.append(rows.max(axis=0).astype(np.float64))
+            else:
+                out._shard_lo.append(None)
+                out._shard_hi.append(None)
+        out._next_id = max([int(spec["next_id"])]
+                           + [s._next_id for s in out.shards])
+        out.last_batch_stats = BatchStats()
+        out.last_shard_stats = [BatchStats() for _ in out.shards]
+        out.durable = None
+        out.backend = backend
+        return out
+
+    def save(self, directory, keep: Optional[int] = None):
+        """Full-state save: partitioner spec + one self-contained snapshot
+        per shard.  Saving into the attached durability directory routes
+        through ``ShardedDurability.checkpoint`` (journal-consistent
+        ``wal_seq`` stamps); any other target gets a standalone copy —
+        the shard-migration / replica-seeding artifact."""
+        from pathlib import Path
+        from ..storage import ShardedDurability, write_snapshot
+        directory = Path(directory)
+        if (self.durable is not None
+                and directory.resolve() == self.durable.directory.resolve()):
+            return self.durable.checkpoint(keep=keep)
+        ShardedDurability(self, directory).write_spec()
+        return [write_snapshot(s, ShardedDurability.shard_dir(directory, k),
+                               keep=keep)
+                for k, s in enumerate(self.shards)]
+
+    @classmethod
+    def restore(cls, directory, backend: str = "numpy",
+                device_opts: Optional[dict] = None,
+                durable: bool = False) -> "ShardedCOAX":
+        """Recover a sharded plane (per-shard snapshot + WAL replay); see
+        ``repro.storage.restore``."""
+        from ..storage import restore as _restore
+        out = _restore(directory, backend=backend, device_opts=device_opts,
+                       durable=durable)
+        if not isinstance(out, cls):
+            raise TypeError(f"{directory} holds a {type(out).__name__} "
+                            f"snapshot, not {cls.__name__}")
+        return out
+
+    def attach_durability(self, directory, keep: int = 3,
+                          sync_every_op: bool = False) -> "ShardedCOAX":
+        """Journal every shard's writes under ``directory`` (per-shard
+        WALs + snapshots, one partitioner spec).  Returns self."""
+        from ..storage import ShardedDurability
+        ShardedDurability.attach(self, directory, keep=keep,
+                                 sync_every_op=sync_every_op)
+        return self
 
     # ------------------------------------------------------------------ #
     @property
@@ -343,4 +437,6 @@ class ShardedCOAX:
             "shard_groups": [[(g.predictor, list(g.dependents))
                               for g in s.groups] for s in self.shards],
             "memory_footprint_bytes": self.memory_footprint(),
+            "durability": (self.durable.describe()
+                           if self.durable is not None else None),
         }

@@ -2,9 +2,10 @@
 
 No orbax offline, so this is a complete self-contained implementation:
 
-* **Atomic**: each checkpoint is staged into ``<dir>/.tmp.step_N`` and
-  ``os.rename``d into place — a crash mid-write never corrupts the latest
-  good checkpoint; restore scans for the newest *complete* manifest.
+* **Atomic**: each checkpoint is staged and ``os.rename``d into place via
+  the repo-wide idiom in ``storage.atomic`` (shared with the index
+  durability plane, DESIGN.md §7.1) — a crash mid-write never corrupts the
+  latest good checkpoint; restore scans for the newest *complete* manifest.
 * **Async**: ``save_async`` snapshots device arrays to host (blocking only
   for the device->host copy) and writes on a worker thread, overlapping the
   next training steps.
@@ -17,16 +18,15 @@ No orbax offline, so this is a complete self-contained implementation:
 from __future__ import annotations
 
 import json
-import os
-import shutil
 import threading
 import time
-import uuid
 from pathlib import Path
 from typing import Any, Dict, Optional
 
 import jax
 import numpy as np
+
+from ..storage import atomic
 
 __all__ = ["Checkpointer", "latest_step"]
 
@@ -54,17 +54,8 @@ def _unflatten_into(template, flat: Dict[str, Any]):
 
 
 def latest_step(directory) -> Optional[int]:
-    directory = Path(directory)
-    if not directory.exists():
-        return None
-    steps = []
-    for p in directory.iterdir():
-        if p.name.startswith("step_") and (p / "MANIFEST.json").exists():
-            try:
-                steps.append(int(p.name.split("_")[1]))
-            except ValueError:
-                continue
-    return max(steps) if steps else None
+    entries = atomic.complete_entries(Path(directory), "step_")
+    return entries[-1][0][0] if entries else None
 
 
 class Checkpointer:
@@ -107,32 +98,22 @@ class Checkpointer:
     # ------------------------------------------------------------------ #
     def _write(self, step: int, host_tree, extra: dict) -> Path:
         flat = _flatten(host_tree)
-        tmp = self.dir / f".tmp.{uuid.uuid4().hex[:8]}.step_{step:08d}"
-        final = self.dir / f"step_{step:08d}"
-        if tmp.exists():
-            shutil.rmtree(tmp)
-        tmp.mkdir(parents=True)
-        np.savez(tmp / "arrays.npz", **flat)
-        manifest = {
-            "step": step,
-            "time": time.time(),
-            "leaves": {k: {"shape": list(np.shape(v)),
-                           "dtype": str(np.asarray(v).dtype)} for k, v in flat.items()},
-            "extra": extra,
-        }
-        (tmp / "MANIFEST.json").write_text(json.dumps(manifest, indent=2))
-        if final.exists():
-            shutil.rmtree(final)
-        os.rename(tmp, final)
-        self._gc()
-        return final
 
-    def _gc(self) -> None:
-        steps = sorted(
-            int(p.name.split("_")[1]) for p in self.dir.iterdir()
-            if p.name.startswith("step_") and (p / "MANIFEST.json").exists())
-        for s in steps[: max(len(steps) - self.keep, 0)]:
-            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+        def stage(tmp: Path) -> None:
+            np.savez(tmp / "arrays.npz", **flat)
+            manifest = {
+                "step": step,
+                "time": time.time(),
+                "leaves": {k: {"shape": list(np.shape(v)),
+                               "dtype": str(np.asarray(v).dtype)}
+                           for k, v in flat.items()},
+                "extra": extra,
+            }
+            (tmp / "MANIFEST.json").write_text(json.dumps(manifest, indent=2))
+
+        final = atomic.stage_and_rename(self.dir / f"step_{step:08d}", stage)
+        atomic.retain(self.dir, "step_", self.keep)
+        return final
 
     # ------------------------------------------------------------------ #
     def restore(self, template, step: Optional[int] = None,

@@ -1,0 +1,44 @@
+"""Durability plane: versioned snapshots + write-ahead log + bit-identical
+crash recovery (DESIGN.md §7).
+
+The memory-only serving planes (batched engine §2, device backend §4,
+delta/compaction lifecycle §5, sharded scatter-gather §6) all die with the
+process; this package makes them restartable:
+
+``atomic``      — the repo-wide staged-rename / newest-complete-manifest /
+                  bounded-retention idiom (§7.1; shared with
+                  ``runtime.checkpoint``)
+``snapshot``    — versioned ``manifest.json`` + ``arrays.npz`` serialisation
+                  of a full ``COAXIndex`` state (§7.3)
+``wal``         — framed, epoch-stamped, torn-tail-tolerant write-ahead log
+                  (§7.2)
+``durability``  — the plane itself: attach/rotate/checkpoint/sync, sharded
+                  layout, and ``restore`` = snapshot + WAL replay ≡ the
+                  never-crashed index, bit for bit (§7.4)
+
+Everything here is numpy + stdlib — no jax in the import path, so a
+restored index serves from the numpy backend anywhere and lazily builds
+device plans where jax exists (cold-start replicas warm-loading a snapshot
+into a ``DevicePlan``).
+"""
+from . import atomic
+from .snapshot import (latest_snapshot, load_snapshot, read_manifest,
+                       snapshot_nbytes, write_snapshot)
+from .wal import WalRecord, WriteAheadLog, read_wal, wal_path
+from .durability import Durability, ShardedDurability, restore
+
+__all__ = [
+    "atomic",
+    "write_snapshot",
+    "load_snapshot",
+    "latest_snapshot",
+    "read_manifest",
+    "snapshot_nbytes",
+    "WriteAheadLog",
+    "WalRecord",
+    "read_wal",
+    "wal_path",
+    "Durability",
+    "ShardedDurability",
+    "restore",
+]
