@@ -124,8 +124,17 @@ def run_batch(rows: int = 100_000, n_queries: int = 256,
     Both paths answer the same rects on the same index; per-wave results are
     checked for set equality against the loop before timing is reported.
     ``backend`` sweeps the numpy path, the device-resident plan (DESIGN.md
-    §4), or both; ``smoke`` additionally asserts batch QPS beats the
-    per-query loop and that all backends agree on hit counts (the CI gate).
+    §4), or both.  Each sweep point also records p50/p99 wave latency
+    (submit→drain, so the device pipeline's overlap shows up in QPS but not
+    in per-wave latency) and the device sweep records the plan's rollups
+    (compile cache size, kernel dispatches, transfer bytes both ways).
+
+    ``smoke`` turns the sweep into the CI gate: batch QPS beats the
+    per-query loop, all backends agree on hit counts, every non-fallback
+    device wave is exactly ONE fused kernel dispatch, and — on a real
+    accelerator only — ``device_speedup > 1`` at batch ≥ 64 (CPU interpret
+    mode is a correctness harness, not a fast path, so the speedup gate is
+    skipped there).
     """
     if smoke:
         batch_sizes = tuple(bs for bs in batch_sizes if bs <= 64) or (1, 64)
@@ -144,6 +153,7 @@ def run_batch(rows: int = 100_000, n_queries: int = 256,
     result = {
         "dataset": "airline", "rows": rows, "n_queries": len(rects),
         "single_qps": single_qps, "batch_qps": {}, "speedup": {},
+        "wave_latency_ms": {},
     }
     backends = ("numpy", "device") if backend == "both" else (backend,)
     hit_counts = {}
@@ -157,12 +167,14 @@ def run_batch(rows: int = 100_000, n_queries: int = 256,
             result["device_speedup"] = {}
         qps_key = "batch_qps" if bk == "numpy" else "device_qps"
         spd_key = "speedup" if bk == "numpy" else "device_speedup"
+        result["wave_latency_ms"][bk] = {}
         for bs in batch_sizes:
             ex = BatchQueryExecutor(idx, max_batch=bs, backend=bk)
             got = ex.execute(rects)      # warm + compile + correctness pass
             assert all(np.array_equal(g, w)
                        for g, w in zip(got, loop_hits)), (bk, bs)
             ex.reset_stats()
+            dev0 = idx.device_stats() if bk == "device" else None
             t0 = time.perf_counter()
             ex.execute(rects)
             dt = time.perf_counter() - t0
@@ -171,11 +183,28 @@ def run_batch(rows: int = 100_000, n_queries: int = 256,
             result[spd_key][bs] = qps / single_qps
             s = ex.stats()
             hit_counts[(bk, bs)] = s["hits"]
+            result["wave_latency_ms"][bk][bs] = {
+                "p50": s["wave_p50_ms"], "p99": s["wave_p99_ms"]}
+            if bk == "device" and dev0 is not None:
+                # §4 gate: one fused kernel launch per non-fallback wave
+                disp = idx.device_stats()["dispatches"] - dev0["dispatches"]
+                assert disp == s["waves"] - s["fallback_waves"], (
+                    f"{disp} dispatches for {s['waves']} waves "
+                    f"({s['fallback_waves']} fallbacks) at batch={bs}")
             emit(f"batch/airline/{bk}_qps@{bs}", qps,
                  f"speedup={qps / single_qps:.2f}x,"
+                 f"p50={s['wave_p50_ms']:.2f}ms,p99={s['wave_p99_ms']:.2f}ms,"
                  f"rows_scanned={s['rows_scanned']},"
                  f"cells_probed={s['cells_probed']},"
-                 f"fallbacks={s['device_fallbacks']}")
+                 f"fallbacks={s['device_fallbacks']},"
+                 f"hit_overflows={s['hit_overflows']}")
+        if bk == "device":
+            dstats = idx.device_stats()
+            result["device_stats"] = dstats      # compile_count + transfers
+            emit("batch/airline/device_plan", float(dstats["dispatches"]),
+                 f"compile_count={dstats['compile_count']},"
+                 f"bytes_h2d={dstats['bytes_h2d']},"
+                 f"bytes_d2h={dstats['bytes_d2h']}")
     idx.backend = "numpy"
 
     if smoke:
@@ -190,8 +219,17 @@ def run_batch(rows: int = 100_000, n_queries: int = 256,
         assert hit_counts, "smoke ran no backend sweep (jax unavailable?)"
         counts = set(hit_counts.values())
         assert len(counts) == 1, f"backends disagree on hit counts: {hit_counts}"
+        if result.get("device_speedup"):
+            import jax
+            if jax.default_backend() != "cpu":   # real accelerator only
+                best_dev = max(v for b, v in result["device_speedup"].items()
+                               if b >= 64)
+                assert best_dev > 1.0, (
+                    f"device plane slower than per-query loop on "
+                    f"{jax.default_backend()}: {best_dev:.2f}x at batch>=64")
         emit("batch/airline/smoke", 1.0,
-             f"batch>=single ok, hit counts agree ({counts.pop()})")
+             f"batch>=single ok, hit counts agree ({counts.pop()}), "
+             f"one dispatch per device wave")
 
     out = Path(out_path) if out_path else \
         Path(__file__).resolve().parents[1] / "BENCH_queries.json"

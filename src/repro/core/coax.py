@@ -109,6 +109,8 @@ class COAXIndex:
         )
         self.keep_dims = reduced_dims(self.n_dims, self.groups)
         self._device_opts = device_opts
+        self._coax_plan = None          # engine.device.CoaxDevicePlan (lazy)
+        self._device_plan_failed = False
         self.last_batch_stats = BatchStats()
         self.durable = None             # storage.Durability, via attach_durability
         self._fit()
@@ -143,6 +145,7 @@ class COAXIndex:
     # ------------------------------------------------------------------ #
     def _fit(self) -> None:
         cfg = self.config
+        self._coax_plan = None     # new-epoch grids invalidate the §4 plan
         n = self.data.shape[0]
         # Split into primary (all groups' margins hold) and outliers.
         inlier = np.ones(n, dtype=bool)
@@ -467,6 +470,8 @@ class COAXIndex:
         idx.groups = list(state["groups"])
         idx.keep_dims = reduced_dims(idx.n_dims, idx.groups)
         idx._device_opts = device_opts
+        idx._coax_plan = None
+        idx._device_plan_failed = False
         idx.last_batch_stats = BatchStats()
         idx.durable = None
         idx.primary = GridFile.from_state(state["primary"],
@@ -571,14 +576,14 @@ class COAXIndex:
         (query_id, row_id); per query the row-id set is exactly what
         ``query`` returns.  One translation pass, one primary directory
         probe and one outlier probe are shared by the whole batch; the
-        §8.2.3 outlier skip is a vectorised bbox test that sub-batches the
-        outlier probe to only the queries that can touch it.
+        §8.2.3 outlier skip is a vectorised bbox test.
 
-        Snapshot hits (from whichever backend served them, numpy or device)
-        are masked by the tombstone set and unioned with one exact numpy
-        delta scan per plane — the same host arithmetic for every backend,
-        so cross-backend results stay bit-identical while the device keeps
-        serving the frozen epoch (DESIGN.md §5).
+        ``backend="device"`` serves the wave from the §4 COAX device plan —
+        primary + outlier + delta/tombstone scan fused into ONE kernel
+        launch (``query_batch_submit`` + ``query_batch_collect``, which
+        pipelined callers may drive directly to overlap waves); waves whose
+        candidate cells overflow ``cell_cap`` fall back to the host path.
+        Either way the answer is bit-identical to the numpy backend.
         """
         rects = np.asarray(rects, dtype=np.float64)
         b = rects.shape[0]
@@ -586,9 +591,24 @@ class COAXIndex:
             self.last_batch_stats = BatchStats(backend=self.backend)
             return np.empty(0, np.int64), np.empty(0, np.int64)
         nav = self.translate_batch(rects)
-        q_p, r_p = self.primary.query_batch(nav, rects)
+        if self.backend == "device":
+            return self.query_batch_collect(
+                self.query_batch_submit(rects, nav=nav))
+        q_p, r_p, stats = self._query_batch_host(rects, nav)
+        self.last_batch_stats = stats
+        return q_p, r_p
+
+    def _query_batch_host(self, rects: np.ndarray, nav: np.ndarray,
+                          fallbacks: int = 0):
+        """The exact host composition (DESIGN.md §5): snapshot grids via the
+        numpy path, tombstone mask, exact delta scans — the numpy backend's
+        ``query_batch`` body and the device plan's ``cell_cap``-fallback
+        path.  Returns ``(query_ids, row_ids, BatchStats)``."""
+        b = rects.shape[0]
+        q_p, r_p = self.primary._query_batch_numpy(nav, rects)
         stats = dataclasses.replace(self.primary.last_batch_stats,
-                                    queries=b, backend=self.backend)
+                                    queries=b, backend=self.backend,
+                                    fallbacks=fallbacks)
 
         if self._outlier_lo is not None:
             # same half-open/closed-bbox intersection test as ``query``
@@ -598,7 +618,7 @@ class COAXIndex:
             )
             if touch.any():
                 sub = rects[touch]
-                q_o, r_o = self.outlier.query_batch(sub, sub)
+                q_o, r_o = self.outlier._query_batch_numpy(sub, sub)
                 stats = stats.merge(self.outlier.last_batch_stats)
                 if r_o.size:
                     q_o = np.nonzero(touch)[0][q_o]    # sub-batch ids -> batch ids
@@ -619,8 +639,86 @@ class COAXIndex:
             order = np.lexsort((r_p, q_p))
             q_p, r_p = q_p[order], r_p[order]
         stats.rows_scanned += b * self.delta_rows      # exact per-query scans
-        self.last_batch_stats = stats
-        return q_p, r_p
+        return q_p, r_p, stats
+
+    # ------------------------------------------------------------------ #
+    # Device wave pipelining (DESIGN.md §4): submit launches the fused
+    # kernel without transferring results; collect is the drain point.
+    # ------------------------------------------------------------------ #
+    def _device_plan_obj(self):
+        """Lazily (re)build the §4 COAX device plan for the CURRENT epoch
+        grids; compaction swaps the grids, which invalidates by identity.
+        Warns once and degrades to the host path when jax is unavailable."""
+        if self._device_plan_failed:
+            return None
+        plan = self._coax_plan
+        if (plan is not None and plan.primary is self.primary
+                and plan.outlier is self.outlier):
+            return plan
+        try:
+            from ..engine.device import CoaxDevicePlan
+            fresh = CoaxDevicePlan(self, **(self._device_opts or {}))
+        except Exception as e:  # pragma: no cover - jax-less installs
+            import warnings
+            warnings.warn(f"device backend unavailable ({e}); using numpy path")
+            self._device_plan_failed = True
+            self._coax_plan = None
+            return None
+        if plan is not None:       # carry transfer/dispatch counters across
+            fresh.dispatch_count += plan.dispatch_count      # epoch swaps
+            fresh.bytes_h2d += plan.bytes_h2d
+            fresh.bytes_d2h += plan.bytes_d2h
+        self._coax_plan = fresh
+        return fresh
+
+    def query_batch_submit(self, rects: np.ndarray,
+                           nav: Optional[np.ndarray] = None):
+        """Launch one device wave (ONE kernel dispatch) and return a handle
+        for ``query_batch_collect`` — results stay device-resident until
+        then.  Waves the plan cannot serve (``cell_cap`` overflow, device
+        unavailable) are answered synchronously here by the host path, so
+        the handle ALWAYS reflects this submit's snapshot+delta state even
+        if writes land before collection (per-wave snapshot semantics)."""
+        rects = np.asarray(rects, dtype=np.float64)
+        if nav is None:
+            nav = self.translate_batch(rects) if rects.shape[0] else None
+        fallbacks = 0
+        if rects.shape[0]:
+            plan = self._device_plan_obj()
+            if plan is not None:
+                ticket = plan.submit_wave(nav, rects)
+                if ticket is not None:
+                    return ("dev", plan, ticket)
+                fallbacks = 1                  # cell_cap overflow -> host
+            q, r, stats = self._query_batch_host(rects, nav, fallbacks)
+        else:
+            q = r = np.empty(0, np.int64)
+            stats = BatchStats(backend=self.backend)
+        return ("host", q, r, stats)
+
+    def query_batch_collect(self, handle) -> Tuple[np.ndarray, np.ndarray]:
+        """Drain one submitted wave (``jax.block_until_ready`` + transfer of
+        the compacted hit buffers) and return its ``query_batch`` answer."""
+        if handle[0] == "host":
+            _, q, r, stats = handle
+            self.last_batch_stats = stats
+            return q, r
+        _, plan, ticket = handle
+        q, r, stats = plan.collect(ticket)
+        self.last_batch_stats = dataclasses.replace(stats,
+                                                    backend=self.backend)
+        return q, r
+
+    def device_stats(self) -> Optional[dict]:
+        """Device-plane rollups (compile cache size, kernel dispatches,
+        transfer bytes both ways), or None before any device wave."""
+        plan = self._coax_plan
+        if plan is None:
+            return None
+        return {"compile_count": plan.compile_count,
+                "dispatches": plan.dispatch_count,
+                "bytes_h2d": plan.bytes_h2d,
+                "bytes_d2h": plan.bytes_d2h}
 
     def query_batch_split(self, rects: np.ndarray) -> List[np.ndarray]:
         """``query_batch`` reshaped to one sorted row-id array per rect."""

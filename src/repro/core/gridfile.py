@@ -137,13 +137,17 @@ class BatchStats:
     (candidate (query, cell) pairs and scan-window rows respectively), so
     backend comparisons can report work done, not just wall-clock QPS.
     ``fallbacks`` counts device waves that overflowed ``cell_cap`` and were
-    re-answered by the numpy path (DESIGN.md §4 overflow contract).
+    re-answered by the numpy path (DESIGN.md §4 submit-time overflow
+    contract); ``hit_overflows`` counts individual queries whose exact
+    device hit count exceeded ``hit_cap`` and were re-answered on the host
+    at drain time (§4 drain-time overflow contract).
     """
     queries: int = 0
     cells_probed: int = 0
     rows_scanned: int = 0
     backend: str = "numpy"
     fallbacks: int = 0
+    hit_overflows: int = 0
 
     def merge(self, other: "BatchStats") -> "BatchStats":
         return BatchStats(
@@ -152,6 +156,7 @@ class BatchStats:
             rows_scanned=self.rows_scanned + other.rows_scanned,
             backend=self.backend,
             fallbacks=self.fallbacks + other.fallbacks,
+            hit_overflows=self.hit_overflows + other.hit_overflows,
         )
 
 
@@ -173,8 +178,8 @@ class GridFile:
         oracle) or ``"device"`` — route ``query_batch`` through the frozen
         jitted device plan (DESIGN.md §4), falling back to numpy when a
         wave's candidate cells overflow the plan's cap.
-    device_opts : kwargs for ``engine.device.DevicePlan`` (cell_cap, tile,
-        min_bucket, use_pallas, interpret).
+    device_opts : kwargs for ``engine.device.DevicePlan`` (cell_cap,
+        hit_cap, tile, min_bucket, use_pallas, interpret).
     epoch : snapshot version label (DESIGN.md §5).  A grid file is an
         immutable snapshot of one epoch; the mutable lifecycle
         (``COAXIndex.compact``) replaces it with a new-epoch instance, which
@@ -521,7 +526,8 @@ class GridFile:
                     out_q, out_r, s = res
                     self.last_batch_stats = BatchStats(
                         queries=b, cells_probed=s["cells_probed"],
-                        rows_scanned=s["rows_scanned"], backend="device")
+                        rows_scanned=s["rows_scanned"], backend="device",
+                        hit_overflows=s.get("hit_overflows", 0))
                     return out_q, out_r
                 fallbacks = 1                   # cell_cap overflow -> numpy
         return self._query_batch_numpy(nav_rects, filter_rects, fallbacks)

@@ -16,8 +16,14 @@ behind one scatter-gather plane, each with its own FDs, delta and epochs.
                          ``recover()`` restart constructor (§7)
 ``ShardedCOAX``        — sharded scatter-gather serving plane (§6); journals
                          per shard via ``repro.storage`` (§7.6)
-``DevicePlan``         — frozen device-resident serving plane (§4); imported
-                         lazily so the numpy engine works without jax
+``DevicePlan``         — device-resident serving plane for one grid (§4)
+``CoaxDevicePlan``     — the COAX megakernel plan: primary + outlier +
+                         delta/tombstone segments fused into ONE kernel
+                         launch per wave, hits compacted into device-
+                         resident buffers and drained one wave behind the
+                         submit (double-buffered by executor/server);
+                         imported lazily so the numpy engine works
+                         without jax
 """
 from .executor import BatchQueryExecutor, WaveStats, split_hits
 from .server import PendingQuery, QueryServer
@@ -32,12 +38,13 @@ __all__ = [
     "ShardedCOAX",
     "partition_rows",
     "DevicePlan",
+    "CoaxDevicePlan",
     "device_available",
 ]
 
 
 def __getattr__(name):  # PEP 562: keep jax out of the default import path
-    if name in ("DevicePlan", "device_available"):
+    if name in ("DevicePlan", "CoaxDevicePlan", "device_available"):
         from . import device
         return getattr(device, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

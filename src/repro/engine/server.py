@@ -171,6 +171,17 @@ class QueryServer:
         return applied
 
     # ------------------------------------------------------------------ #
+    def _finish_wave(self, wave, answers, dur,
+                     results: Dict[int, np.ndarray]) -> None:
+        """Drain-side bookkeeping shared by the pipelined and sync paths."""
+        for q, ans in zip(wave, answers):
+            results[q.qid] = ans
+        self.waves_drained += 1
+        if (dur is not None and self.checkpoint_every
+                and self.waves_drained % self.checkpoint_every == 0):
+            dur.checkpoint()
+            self.checkpoints_written += 1
+
     def drain(self, max_waves: Optional[int] = None) -> Dict[int, np.ndarray]:
         """Run pending queries to completion (or for ``max_waves`` waves).
 
@@ -180,15 +191,24 @@ class QueryServer:
         observes one consistent index state (per-wave snapshot semantics);
         a durability plane, if attached, fsyncs its WAL at the same
         boundary — the log and the wave agree on what happened (§7.2).
+
+        On the device backend the drain loop is DOUBLE-BUFFERED (DESIGN.md
+        §4): each wave is submitted via ``executor.execute_submit`` — one
+        fused kernel launch, results left device-resident — and drained one
+        wave behind, so wave ``i+1``'s write flush + upload + launch
+        overlaps wave ``i``'s kernel.  Snapshot semantics survive the
+        overlap because the device plan captures epoch/delta/tombstone
+        state at SUBMIT, before the next boundary's writes are flushed.
         """
         results: Dict[int, np.ndarray] = {}
         width = self.executor.max_batch
         waves_this_call = 0
+        inflight: List[tuple] = []             # [(wave_queries, pending)]
+        dur = getattr(self.executor.index, "durable", None)
         while self._pending or self._write_queue:
             if max_waves is not None and waves_this_call >= max_waves:
                 break
             self.flush_writes()
-            dur = getattr(self.executor.index, "durable", None)
             if dur is not None:
                 dur.sync()
             if not self._pending:
@@ -197,16 +217,27 @@ class QueryServer:
                            key=lambda q: (-q.priority, q.arrival, q.qid))
             wave = cands[:width]
             rects = np.stack([q.rect for q in wave])
-            answers = self.executor.execute(rects)
-            for q, ans in zip(wave, answers):
-                results[q.qid] = ans
-                del self._pending[q.qid]
-            self.waves_drained += 1
+            for q in wave:                     # claimed at formation so the
+                del self._pending[q.qid]       # next wave can't re-pick them
             waves_this_call += 1
-            if (dur is not None and self.checkpoint_every
-                    and self.waves_drained % self.checkpoint_every == 0):
-                dur.checkpoint()
-                self.checkpoints_written += 1
+            pending = self.executor.execute_submit(rects)
+            if pending is not None:            # pipelined device path
+                inflight.append((wave, pending))
+                if len(inflight) >= 2:
+                    w, p = inflight.pop(0)
+                    self._finish_wave(w, self.executor.execute_collect(p),
+                                      dur, results)
+                continue
+            while inflight:                    # backend flipped mid-drain
+                w, p = inflight.pop(0)
+                self._finish_wave(w, self.executor.execute_collect(p),
+                                  dur, results)
+            self._finish_wave(wave, self.executor.execute(rects),
+                              dur, results)
+        while inflight:
+            w, p = inflight.pop(0)
+            self._finish_wave(w, self.executor.execute_collect(p),
+                              dur, results)
         return results
 
     # ------------------------------------------------------------------ #

@@ -5,11 +5,14 @@ exposes padded jit'd wrappers; ``ref`` holds the pure-jnp oracles the tests
 compare against.  All kernels are validated in interpret mode on CPU; the
 BlockSpecs target TPU v5e VMEM/VPU/MXU geometry (DESIGN.md §3).  The
 device-resident serving plane (``engine.device``, DESIGN.md §4) embeds
-``range_scan_batch`` as the filter stage of its fused per-wave program.
+``fused_scan`` — probe + segment search + filter + compaction in ONE launch
+with device-resident compacted hit buffers — as its per-wave program.
 """
-from .ops import (bucket_histogram, range_scan_batch_query, range_scan_query,
-                  split_by_margin)
+from .fused_scan import fused_scan, fused_scan_call
+from .ops import (bucket_histogram, fused_range_scan, range_scan_batch_query,
+                  range_scan_query, split_by_margin)
 from . import ref
 
-__all__ = ["range_scan_query", "range_scan_batch_query", "bucket_histogram",
+__all__ = ["range_scan_query", "range_scan_batch_query", "fused_range_scan",
+           "fused_scan", "fused_scan_call", "bucket_histogram",
            "split_by_margin", "ref"]

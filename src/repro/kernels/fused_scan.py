@@ -1,0 +1,209 @@
+"""Fused probe+search+filter Pallas megakernel (DESIGN.md §4).
+
+One ``pl.pallas_call`` evaluates, for every (query b, record tile i) of a
+``(Bp, num_tiles)`` grid, the WHOLE per-row serving predicate that the old
+device pipeline spread over three stages (directory probe, per-cell bisect,
+windowed filter):
+
+  ``hit[p] = alive[p] ∧ candidate[p] ∧ full-predicate[p]``
+
+* ``candidate`` replaces both the probe and the bisect: the host passes the
+  per-query per-grid-dim cell range ``[first, last]`` (ONE conservative-f32
+  directory pass, shared with the overflow pre-check) and the kernel tests
+  each row's precomputed cell coordinates against it, plus the in-cell
+  sorted attribute against ``[t_lo, t_hi)``.  Because rows are stored
+  cell-major and cell-sorted, this membership test selects exactly the rows
+  of the numpy path's refined candidate blocks — no window union, no
+  ragged cell expansion, no ``cell_cap`` padding inside the kernel.
+* ``full-predicate`` is the ceil-rounded f32 rect compare (`f32_ceil`
+  pairing makes it bit-equal to the f64 host compare).
+* ``alive`` masks tombstoned snapshot rows and delta padding, so the §5
+  delta/tombstone scan runs in the same launch (``probe=False`` segments
+  scan an append-log block with candidacy ≡ alive).
+
+Outputs are device-resident and COMPACTED per query: a true hit count, the
+first ``min(count, hit_cap)`` hit positions in ascending order, and the
+candidate-rows-scanned counter.  Only these small buffers ever transfer
+back (at explicit drain points, ``engine.device``), replacing the old
+``(B, N)`` hit-mask transfer.
+
+Grid order: ``b`` is the OUTER axis, tiles innermost — each query's output
+block stays resident while its tiles accumulate (counts/hits/scanned revisit
+the same ``(b, 0)`` block every step, the §3 accumulation idiom).  That
+trades the record-tile reuse of ``range_scan_batch`` for resident per-query
+accumulators; the record block streams once per query.
+
+Compaction inside a tile is branch-free: ``pos = cumsum(hit) - 1`` ranks the
+tile's hits, a drop-mode scatter packs their global row positions ascending,
+and the packed tile is stored at dynamic offset ``min(count_so_far,
+hit_cap)``.  Entries past ``min(count, hit_cap)`` are unspecified (the
+buffer is ``hit_cap + tile`` wide so the last store stays in bounds); a
+query whose count exceeds ``hit_cap`` is re-answered exactly on the host
+from captured state (the drain-time overflow contract, DESIGN.md §4).
+
+``ref.fused_scan_ref`` is the pure-jnp oracle with the identical contract;
+it doubles as the CPU fast path inside the device plane's jitted wave
+program (interpret-mode Pallas is a correctness tool, not a fast path).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE = 512
+DEFAULT_HIT_CAP = 1024
+
+__all__ = ["fused_scan", "fused_scan_call", "DEFAULT_TILE", "DEFAULT_HIT_CAP"]
+
+
+def _make_kernel(probe: bool, has_sort: bool, tile: int, hit_cap: int):
+    """Kernel body specialised to which predicate stages this segment has.
+
+    Ref order (present refs only):
+      rows (D, T) f32 | [coords (kk, T) i32, first (1, kk) i32,
+      last (1, kk) i32] | [sv (1, T) f32, tband (1, 2) f32] |
+      alive (1, T) i32, flo (D, 1) f32, fhi (D, 1) f32
+      -> count (1, 1) i32, hits (1, hit_cap + T) i32, scanned (1, 1) i32
+    """
+
+    def kernel(*refs):
+        it = iter(refs)
+        rows_ref = next(it)
+        coords_ref = next(it) if probe else None
+        first_ref = next(it) if probe else None
+        last_ref = next(it) if probe else None
+        sv_ref = next(it) if has_sort else None
+        tband_ref = next(it) if has_sort else None
+        alive_ref = next(it)
+        flo_ref = next(it)
+        fhi_ref = next(it)
+        count_ref = next(it)
+        hits_ref = next(it)
+        scanned_ref = next(it)
+
+        i = pl.program_id(1)
+
+        @pl.when(i == 0)
+        def _init():                     # fresh resident buffers per wave
+            count_ref[...] = jnp.zeros_like(count_ref)
+            scanned_ref[...] = jnp.zeros_like(scanned_ref)
+            hits_ref[...] = jnp.full_like(hits_ref, -1)
+
+        rows = rows_ref[...]                                   # (D, T)
+        inside = jnp.all((rows >= flo_ref[...]) & (rows < fhi_ref[...]),
+                         axis=0, keepdims=True)                # (1, T)
+        cand = alive_ref[...] > 0                              # (1, T)
+        if probe:
+            coords = coords_ref[...]                           # (kk, T)
+            in_range = (coords >= first_ref[...].T) & (coords <= last_ref[...].T)
+            cand = cand & jnp.all(in_range, axis=0, keepdims=True)
+        if has_sort:
+            sv = sv_ref[...]                                   # (1, T)
+            cand = cand & (sv >= tband_ref[0, 0]) & (sv < tband_ref[0, 1])
+        hit = cand & inside
+
+        # branch-free per-tile compaction: rank hits, pack ascending
+        gid = i * tile + jax.lax.broadcasted_iota(jnp.int32, (1, tile), 1)
+        hi32 = hit.astype(jnp.int32)
+        nh = jnp.sum(hi32)
+        pos = jnp.cumsum(hi32[0]) - 1                          # (T,)
+        tgt = jnp.where(hit[0], pos, tile)                     # miss -> dropped
+        packed = jnp.full((tile,), -1, jnp.int32).at[tgt].set(
+            gid[0], mode="drop")
+
+        base = count_ref[0, 0]
+        start = jnp.minimum(base, hit_cap)   # clamp keeps the store in bounds
+        hits_ref[0, pl.ds(start, tile)] = packed
+        count_ref[0, 0] = base + nh
+        scanned_ref[0, 0] = scanned_ref[0, 0] + jnp.sum(cand.astype(jnp.int32))
+
+    return kernel
+
+
+def fused_scan_call(
+    rows_t,            # (D, N_pad) f32, N_pad % tile == 0, pads +inf
+    flo_t,             # (D, Bp) f32 ceil-rounded lower bounds (columns)
+    fhi_t,             # (D, Bp) f32 ceil-rounded upper bounds
+    alive,             # (1, N_pad) i32, 0 for tombstoned/padding rows
+    coords=None,       # (kk, N_pad) i32 per-dim cell coords (pads -1); probe
+    first=None,        # (Bp, kk) i32 per-query first cell coord;     segments
+    last=None,         # (Bp, kk) i32 per-query last cell coord;      only
+    sv=None,           # (1, N_pad) f32 in-cell sorted attribute (pads +inf)
+    tband=None,        # (Bp, 2) f32 ceil-rounded [t_lo, t_hi) sort targets
+    *,
+    tile: int = DEFAULT_TILE,
+    hit_cap: int = DEFAULT_HIT_CAP,
+    interpret: bool = True,
+):
+    """Launch the megakernel over one segment; see module docstring.
+
+    Returns ``(counts (Bp, 1) i32, hits (Bp, hit_cap + tile) i32,
+    scanned (Bp, 1) i32)``.  ``hits[b, :min(counts[b], hit_cap)]`` are the
+    matching row positions ascending; later entries are unspecified.
+    Probe/sort stages are enabled by passing their operands (all-or-none
+    per stage).  Not jitted — the device plane embeds this inside its own
+    jitted wave program; ``fused_scan`` is the standalone jitted entry.
+    """
+    probe = coords is not None
+    has_sort = sv is not None
+    d, n = rows_t.shape
+    if n % tile:
+        raise ValueError(f"N={n} must be a multiple of tile={tile}")
+    bp = flo_t.shape[1]
+    num_tiles = n // tile
+
+    operands = [rows_t]
+    in_specs = [pl.BlockSpec((d, tile), lambda b, i: (0, i))]
+    if probe:
+        kk = coords.shape[0]
+        operands += [coords, first, last]
+        in_specs += [
+            pl.BlockSpec((kk, tile), lambda b, i: (0, i)),
+            pl.BlockSpec((1, kk), lambda b, i: (b, 0)),
+            pl.BlockSpec((1, kk), lambda b, i: (b, 0)),
+        ]
+    if has_sort:
+        operands += [sv, tband]
+        in_specs += [
+            pl.BlockSpec((1, tile), lambda b, i: (0, i)),
+            pl.BlockSpec((1, 2), lambda b, i: (b, 0)),
+        ]
+    operands += [alive, flo_t, fhi_t]
+    in_specs += [
+        pl.BlockSpec((1, tile), lambda b, i: (0, i)),
+        pl.BlockSpec((d, 1), lambda b, i: (0, b)),
+        pl.BlockSpec((d, 1), lambda b, i: (0, b)),
+    ]
+    width = hit_cap + tile
+    counts, hits, scanned = pl.pallas_call(
+        _make_kernel(probe, has_sort, tile, hit_cap),
+        grid=(bp, num_tiles),              # tiles innermost: resident outputs
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda b, i: (b, 0)),
+            pl.BlockSpec((1, width), lambda b, i: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b, i: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp, 1), jnp.int32),
+            jax.ShapeDtypeStruct((bp, width), jnp.int32),
+            jax.ShapeDtypeStruct((bp, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(*operands)
+    return counts, hits, scanned
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tile", "hit_cap", "interpret"))
+def fused_scan(rows_t, flo_t, fhi_t, alive, coords=None, first=None,
+               last=None, sv=None, tband=None, *,
+               tile: int = DEFAULT_TILE, hit_cap: int = DEFAULT_HIT_CAP,
+               interpret: bool = True):
+    """Jitted standalone wrapper of ``fused_scan_call`` (tests, notebooks)."""
+    return fused_scan_call(rows_t, flo_t, fhi_t, alive, coords, first, last,
+                           sv, tband, tile=tile, hit_cap=hit_cap,
+                           interpret=interpret)

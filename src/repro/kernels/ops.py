@@ -5,9 +5,10 @@ and expose numpy-friendly entry points the COAX core and benchmarks call.
 ``use_pallas=False`` routes to the pure-jnp oracle (identical results) —
 the default on CPU, where interpret-mode Pallas is a correctness tool, not
 a fast path.  The device serving plane (``engine.device``, DESIGN.md §4)
-bypasses these host-facing wrappers: it calls ``range_scan_batch`` /
-``ref.range_scan_batch_ref`` directly inside its own jitted pipeline with
-plan-resident pre-padded arrays.
+bypasses these host-facing wrappers: it embeds ``fused_scan_call`` /
+``ref.fused_scan_ref`` segments directly inside its own jitted wave program
+with plan-resident pre-padded arrays; ``fused_range_scan`` below is the
+standalone entry for tests and notebooks.
 """
 from __future__ import annotations
 
@@ -19,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import ref
+from .fused_scan import fused_scan
 from .grid_histogram import grid_histogram
 from .margin_split import margin_split
 from .range_scan import range_scan
@@ -27,6 +29,7 @@ from .range_scan_batch import range_scan_batch
 __all__ = [
     "range_scan_query",
     "range_scan_batch_query",
+    "fused_range_scan",
     "bucket_histogram",
     "split_by_margin",
 ]
@@ -108,6 +111,52 @@ def range_scan_batch_query(
             padded, rect_lo.T, rect_hi.T, windows, tile=tile,
         )
     return counts.sum(axis=1), mask[:, :n]
+
+
+def fused_range_scan(
+    rows_t,                # (D, N) column-major records
+    rect_lo,               # (B, D) per-query ceil-rounded lower bounds
+    rect_hi,               # (B, D) per-query ceil-rounded upper bounds
+    alive=None,            # (N,) liveness; None -> all alive
+    coords=None,           # (kk, N) per-dim cell coords (probe stage)
+    first=None,            # (B, kk) per-query first cell coord
+    last=None,             # (B, kk) per-query last cell coord
+    sv=None,               # (N,) in-cell sorted attribute (sort stage)
+    tband=None,            # (B, 2) per-query [t_lo, t_hi) sort targets
+    *,
+    tile: int = 512,
+    hit_cap: int = 1024,
+    use_pallas: bool = True,
+    interpret: bool = True,
+):
+    """Standalone megakernel entry: pads N to a tile multiple and routes to
+    the Pallas kernel or the jnp oracle.
+
+    Returns ``(counts (B,), hits (B, hit_cap + tile), scanned (B,))``; see
+    ``fused_scan`` for the compacted-hits contract.  Positions ≥ the
+    original N never appear (pads are dead: rows +inf, alive 0, coords -1).
+    """
+    rows_t = jnp.asarray(rows_t, jnp.float32)
+    d, n = rows_t.shape
+    padded = _pad_to(rows_t, tile, jnp.inf)
+    if alive is None:
+        alive = jnp.ones(n, jnp.int32)
+    alive_p = _pad_to(jnp.asarray(alive, jnp.int32), tile, 0)[None, :]
+    kwargs = {}
+    if coords is not None:
+        kwargs["coords"] = _pad_to(jnp.asarray(coords, jnp.int32), tile, -1)
+        kwargs["first"] = jnp.asarray(first, jnp.int32)
+        kwargs["last"] = jnp.asarray(last, jnp.int32)
+    if sv is not None:
+        kwargs["sv"] = _pad_to(jnp.asarray(sv, jnp.float32), tile, jnp.inf)[None, :]
+        kwargs["tband"] = jnp.asarray(tband, jnp.float32)
+    flo_t = jnp.asarray(rect_lo, jnp.float32).T
+    fhi_t = jnp.asarray(rect_hi, jnp.float32).T
+    fn = fused_scan if use_pallas else ref.fused_scan_ref
+    extra = {"interpret": interpret} if use_pallas else {}
+    counts, hits, scanned = fn(padded, flo_t, fhi_t, alive_p,
+                               tile=tile, hit_cap=hit_cap, **kwargs, **extra)
+    return counts[:, 0], hits, scanned[:, 0]
 
 
 def bucket_histogram(

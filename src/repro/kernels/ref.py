@@ -11,8 +11,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["range_scan_ref", "range_scan_batch_ref", "grid_histogram_ref",
-           "margin_split_ref"]
+__all__ = ["range_scan_ref", "range_scan_batch_ref", "fused_scan_ref",
+           "grid_histogram_ref", "margin_split_ref"]
 
 
 def range_scan_ref(rows_t, rect_lo, rect_hi, window, *, tile: int = 512):
@@ -43,6 +43,83 @@ def range_scan_batch_ref(rows_t, rect_lo_t, rect_hi_t, windows, *, tile: int = 5
     mask = (inside & in_window).astype(jnp.int32)
     counts = mask.reshape(mask.shape[0], n // tile, tile).sum(axis=2)
     return mask, counts
+
+
+def fused_scan_ref(rows_t, flo_t, fhi_t, alive, coords=None, first=None,
+                   last=None, sv=None, tband=None, gidx=None, *,
+                   tile: int = 512, hit_cap: int = 1024):
+    """Oracle for ``fused_scan.fused_scan`` — identical contract, and the
+    CPU fast path of the §4 device plane.
+
+    Returns ``(counts (Bp, 1) i32, hits (Bp, hit_cap + tile) i32,
+    scanned (Bp, 1) i32)`` with ``hits[b, :min(counts[b], hit_cap)]`` the
+    matching row positions ascending (unspecified slots are -1, which also
+    matches the kernel for non-overflowing queries).
+
+    Two things differ from the kernel's tile loop, neither observable:
+
+    * **Candidate-gather scan** (``gidx (Bp, R)`` i32): each query's
+      predicate evaluation runs over only ``rows_t[:, gidx[b]]`` — the
+      device plane fills ``gidx`` with EXACTLY each query's probe-derived
+      candidate-box row positions, ascending (each cell in the candidate
+      coord box is a contiguous cell-major block), padded with the
+      position of a dead ``+inf`` pad row.  Exact because every row a
+      query can HIT is a member of its candidate box (rows outside fail
+      the coord test in the full scan too), each candidate appears exactly
+      once, and pad slots fail the ``alive`` test.  Because membership is
+      exact, the ``coords``/``first``/``last`` test is implied and skipped
+      on this path (same ``counts``/``hits``/``scanned``).  Hit positions
+      come back global via a ``gidx`` gather.  This makes the CPU oracle
+      scale with per-query candidate counts instead of table size, like
+      the numpy path; ``gidx=None`` scans the full array
+      (kernel-identical shape work).
+    * **Bisect compaction**: instead of the kernel's per-tile
+      cumsum-scatter (XLA CPU scatters serialise), the j-th defined hit
+      slot is located by bisecting the running hit count — same prefix,
+      built by pure gathers.
+    """
+    d, n = rows_t.shape
+    bp = flo_t.shape[1]
+    if gidx is not None:
+        width = gidx.shape[1]
+        inside = jnp.ones((bp, width), bool)
+        for j in range(d):
+            inside &= (rows_t[j][gidx] >= flo_t[j][:, None]) & (
+                rows_t[j][gidx] < fhi_t[j][:, None])
+        cand = alive[0][gidx] > 0
+        # coord-box membership is implied: gidx holds exactly the box rows
+        if sv is not None:
+            cand = cand & (sv[0][gidx] >= tband[:, :1]) & (
+                sv[0][gidx] < tband[:, 1:])
+    else:
+        inside = jnp.ones((bp, n), bool)
+        for j in range(d):
+            inside &= (rows_t[j][None, :] >= flo_t[j][:, None]) & (
+                rows_t[j][None, :] < fhi_t[j][:, None])
+        cand = jnp.broadcast_to(alive > 0, (bp, n))
+        if coords is not None:
+            for j in range(coords.shape[0]):
+                cand = cand & (coords[j][None, :] >= first[:, j:j + 1]) & (
+                    coords[j][None, :] <= last[:, j:j + 1])
+        if sv is not None:
+            cand = cand & (sv >= tband[:, :1]) & (sv < tband[:, 1:])
+    hit = cand & inside
+
+    running = jnp.cumsum(hit.astype(jnp.int32), axis=1)        # nondecreasing
+    counts = running[:, -1:]
+    scanned = cand.sum(axis=1, dtype=jnp.int32)[:, None]
+    targets = jnp.arange(1, hit_cap + 1, dtype=jnp.int32)
+    idx = jax.vmap(                        # j-th hit = first i with count j+1
+        lambda r: jnp.searchsorted(r, targets, side="left"))(running)
+    defined = targets[None, :] <= jnp.minimum(counts, hit_cap)
+    if gidx is not None:                   # local slot -> global row position
+        pos = jnp.take_along_axis(
+            gidx, jnp.minimum(idx, gidx.shape[1] - 1), axis=1)
+    else:
+        pos = idx
+    body = jnp.where(defined, pos.astype(jnp.int32), -1)
+    hits = jnp.pad(body, ((0, 0), (0, tile)), constant_values=-1)
+    return counts, hits, scanned
 
 
 def grid_histogram_ref(x, d, params, *, buckets: int = 64):
