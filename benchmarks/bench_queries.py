@@ -514,6 +514,174 @@ def run_recover(rows: int = 100_000, n_queries: int = 128,
     return result
 
 
+def run_failover(rows: int = 50_000, n_queries: int = 96, n_ops: int = 48,
+                 out_path: str = None, smoke: bool = False) -> dict:
+    """Replication mode (DESIGN.md §8): cost + correctness of failover.
+
+    A 2-replica ``ReplicatedServer`` over airline rows streams an
+    insert/delete schedule while a scripted ``FaultPlan`` damages the wire
+    (drops, torn frames, duplicates, reordering, transport errors — all
+    repaired through catch-up).  Reported: shipping overhead on the write
+    path, frames/bytes shipped, replica convergence (lag drained to 0),
+    then two failover drills — the primary killed MID-STREAM with an
+    acked-but-unpumped tail, and killed MID-COMPACTION-ROTATION (the §7.5
+    crash window) — each measuring promotion latency and gating the
+    promoted frontier ≥ the last acked write.  Every stage asserts
+    bit-identical flat hits against a never-crashed oracle index replaying
+    the same ops.  Results land in the ``failover`` section of
+    ``BENCH_storage.json``; other sections are merge-preserved.
+    """
+    import shutil
+    import tempfile
+
+    from repro.replication import ReplicatedServer
+    from repro.runtime.failure import FaultPlan
+
+    if smoke:
+        n_ops = min(n_ops, 24)
+    ds = dataset("airline", rows * 2)            # second half = insert pool
+    base = np.ascontiguousarray(ds.data[:rows])
+    pool = ds.data[rows:].copy()
+    rects = np.asarray(queries("airline", rows, n_queries, PCFG.knn_k))
+    result = {"dataset": "airline", "rows": rows, "n_queries": len(rects),
+              "n_ops": n_ops}
+
+    def op_stream(target, upto):
+        rng = np.random.default_rng(PCFG.seed)
+        pos = 0
+        for op in range(upto):
+            if op % 4 == 3:
+                target.delete(rng.integers(0, rows, 16))
+            else:
+                rows_in = pool[pos:pos + 48].copy()
+                pos += 48
+                if op % 8 == 6:
+                    rows_in[:, 1] = rows_in[:, 1] * 3.0 + 500.0
+                target.insert(rows_in)
+            yield op
+
+    def flat(index):
+        return index.query_batch_split(rects)
+
+    def agree(a, b):
+        return all(np.array_equal(x, y) for x, y in zip(a, b))
+
+    workdir = Path(tempfile.mkdtemp(prefix="bench_failover_"))
+    try:
+        # ---------------- drill 1: faulty wire + mid-stream kill -------- #
+        plan = FaultPlan({
+            "ship.replica-0": {3: "drop", 7: "tear", 11: "dup",
+                               15: ("tear", 9), 19: "drop"},
+            "ship.replica-1": {5: "reorder", 9: ("error", 2),
+                               13: ("delay", 2), 17: "tear"},
+        })
+        oracle = COAXIndex(base.copy(), CoaxConfig(auto_compact=False))
+        srv = ReplicatedServer(
+            COAXIndex(base, CoaxConfig(auto_compact=False)), workdir / "d1",
+            n_replicas=2, plan=plan)
+        t0 = time.perf_counter()
+        for op in op_stream(srv, n_ops):
+            if op % 3 == 2:
+                srv.tick()
+        write_s = time.perf_counter() - t0
+        for _ in op_stream(oracle, n_ops):
+            pass
+        srv.compact()                            # ships the ROTATE frame
+        oracle.compact()
+        t0 = time.perf_counter()
+        for _ in range(16):
+            srv.tick()
+            if all(r.lag_frames() == 0 for r in srv.replicas):
+                break
+        converge_s = time.perf_counter() - t0
+        st = srv.stats()
+        assert all(r["lag_frames"] == 0 for r in st["replicas"]), \
+            "replicas failed to drain their lag"
+        want = flat(oracle)
+        for rep in srv.replicas:
+            assert agree(flat(rep.index), want), \
+                f"{rep.name} diverged from the never-crashed oracle"
+        result["ship"] = {
+            "write_path_s": write_s, "converge_s": converge_s,
+            "frames": st["ship"]["shipped_frames"],
+            "bytes": st["ship"]["shipped_bytes"],
+            "send_retries": st["ship"]["send_retries"],
+            "transport_faults": st["transport_faults"],
+        }
+        emit("failover/airline/ship_frames", st["ship"]["shipped_frames"],
+             f"bytes={st['ship']['shipped_bytes']},"
+             f"faults={sum(st['transport_faults'].values())},agreement=ok")
+
+        # primary dies with an acked tail the replicas never saw shipped
+        srv.insert(pool[-64:])
+        oracle.insert(pool[-64:])
+        acked = srv.acked
+        srv.kill_primary()
+        t0 = time.perf_counter()
+        promoted = srv.promote()
+        promote_s = time.perf_counter() - t0
+        assert promoted.frontier >= acked, \
+            f"promotion lost acked writes: {promoted.frontier} < {acked}"
+        assert agree(flat(promoted.index), flat(oracle)), \
+            "promoted index diverged from the never-crashed oracle"
+        for op in op_stream(srv, 4):             # writes resume post-promotion
+            srv.tick()
+        for _ in op_stream(oracle, 4):
+            pass
+        for _ in range(8):
+            srv.tick()
+        assert agree(flat(srv.primary), flat(oracle)), \
+            "post-promotion writes diverged from the oracle"
+        result["promote_midstream_s"] = promote_s
+        emit("failover/airline/promote_midstream_s", promote_s,
+             f"frontier={promoted.frontier}>=acked={acked},agreement=ok")
+
+        # ---------------- drill 2: kill mid-compaction-rotation --------- #
+        plan2 = FaultPlan({"primary.rotate": {0: "crash"}})
+        oracle2 = COAXIndex(base.copy(), CoaxConfig(auto_compact=False))
+        srv2 = ReplicatedServer(
+            COAXIndex(base, CoaxConfig(auto_compact=False)), workdir / "d2",
+            n_replicas=2, plan=plan2)
+        for op in op_stream(srv2, n_ops // 2):
+            if op % 3 == 2:
+                srv2.tick()
+        for _ in op_stream(oracle2, n_ops // 2):
+            pass
+        acked2 = srv2.acked
+        try:
+            srv2.compact()                       # dies inside the §7.5 window
+            raise AssertionError("rotation crash did not fire")
+        except RuntimeError:
+            pass
+        oracle2.compact()                        # ...but the rotation is on disk
+        srv2.kill_primary()
+        t0 = time.perf_counter()
+        promoted2 = srv2.promote()
+        promote2_s = time.perf_counter() - t0
+        assert promoted2.frontier >= acked2
+        assert promoted2.index.epoch == oracle2.epoch
+        assert agree(flat(promoted2.index), flat(oracle2)), \
+            "mid-rotation promotion diverged from the never-crashed oracle"
+        result["promote_midrotation_s"] = promote2_s
+        emit("failover/airline/promote_midrotation_s", promote2_s,
+             f"epoch={promoted2.index.epoch},agreement=ok")
+        if smoke:
+            emit("failover/airline/smoke", 1.0,
+                 f"bit-identity held over {n_ops} ops, 2 kills, "
+                 f"{sum(st['transport_faults'].values())} wire faults "
+                 f"({len(rects)} rects)")
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+
+    out = Path(out_path) if out_path else \
+        Path(__file__).resolve().parents[1] / "BENCH_storage.json"
+    merged = _read_bench_json(out)
+    merged["failover"] = result
+    out.write_text(json.dumps(merged, indent=2) + "\n")
+    print(f"BENCH {json.dumps(result)}")
+    return result
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--batch", action="store_true",
@@ -526,6 +694,9 @@ if __name__ == "__main__":
     ap.add_argument("--recover", action="store_true",
                     help="durability mode: snapshot/save/recovery costs + "
                          "BENCH_storage.json (DESIGN.md §7)")
+    ap.add_argument("--failover", action="store_true",
+                    help="replication mode: WAL shipping under faults, "
+                         "promotion drills + BENCH_storage.json (DESIGN.md §8)")
     ap.add_argument("--backend", choices=("numpy", "device", "both"),
                     default="both", help="which query_batch backend(s) to sweep")
     ap.add_argument("--smoke", action="store_true",
@@ -533,7 +704,11 @@ if __name__ == "__main__":
     ap.add_argument("--rows", type=int, default=None)
     ap.add_argument("--queries", type=int, default=None)
     args = ap.parse_args()
-    if args.recover:
+    if args.failover:
+        run_failover(rows=args.rows or 50_000,
+                     n_queries=args.queries or (48 if args.smoke else 96),
+                     smoke=args.smoke)
+    elif args.recover:
         run_recover(rows=args.rows or 100_000,
                     n_queries=args.queries or (64 if args.smoke else 128),
                     smoke=args.smoke)

@@ -1,7 +1,8 @@
 """Serving driver: batched request serving with COAX-routed admission.
 
-    PYTHONPATH=src python examples/serve_requests.py            # LM serving
-    PYTHONPATH=src python examples/serve_requests.py --durable  # kill-and-resume
+    PYTHONPATH=src python examples/serve_requests.py             # LM serving
+    PYTHONPATH=src python examples/serve_requests.py --durable   # kill-and-resume
+    PYTHONPATH=src python examples/serve_requests.py --failover  # replicated failover
 
 Default mode: requests with correlated (arrival, prompt_len,
 predicted_decode, priority) attributes stream into the router; admission
@@ -9,10 +10,18 @@ queries form length-homogeneous waves through the COAX index (the
 serving-plane integration, DESIGN.md §2).
 
 ``--durable`` demos the durability plane (DESIGN.md §7): a journaled
-``QueryServer`` absorbs query waves and writes, gets "killed" mid-stream —
-with its WAL torn mid-record, as a real crash would leave it — and a fresh
-process recovers from snapshot + WAL replay, answers the same queries
-bit-identically, and keeps serving.
+``QueryServer`` absorbs query waves and writes, honours a SIGTERM-style
+graceful-shutdown request (finish the wave, flush writes, fsync, close),
+then gets "killed" mid-stream — with its WAL torn mid-record, as a real
+crash would leave it — and a fresh process recovers from snapshot + WAL
+replay, answers the same queries bit-identically, and keeps serving.
+
+``--failover`` demos the replication plane (DESIGN.md §8): a
+``ReplicatedServer`` ships WAL frames to two read replicas over a faulty
+transport (drops, tears, duplicates, reordering — all repaired), routes
+reads to healthy replicas, loses its primary mid-stream, promotes the
+most-caught-up replica without losing an acknowledged write, and keeps
+serving bit-identical answers.
 """
 import argparse
 import dataclasses
@@ -27,6 +36,67 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 import numpy as np
 
 
+def main_failover():
+    """Replicated serving: faulty shipping, primary death, promotion."""
+    from repro.core import COAXIndex, CoaxConfig
+    from repro.data import knn_rect_queries, make_airline
+    from repro.replication import ReplicatedServer
+    from repro.runtime.failure import FaultPlan
+
+    workdir = Path(tempfile.mkdtemp(prefix="coax_failover_"))
+    try:
+        ds = make_airline(30_000, seed=7)
+        base, pool = ds.data[:25_000], ds.data[25_000:]
+        rects = knn_rect_queries(base, 32, 64, seed=1)
+
+        print("== replicated serving under injected faults ==")
+        plan = FaultPlan({
+            "ship.replica-0": {3: "drop", 7: "tear", 11: "dup"},
+            "ship.replica-1": {5: "reorder", 9: ("error", 1)},
+        })
+        idx = COAXIndex(base, CoaxConfig(auto_compact=False))
+        srv = ReplicatedServer(idx, workdir, n_replicas=2, plan=plan)
+        for i in range(10):
+            srv.insert(pool[i * 120:(i + 1) * 120])
+            if i % 3 == 2:
+                srv.delete(np.arange(i * 400, i * 400 + 150))
+            srv.tick()
+        srv.compact()                     # ships the ROTATE control frame
+        srv.tick()
+        expected = [np.sort(srv.primary.query(r)) for r in rects]
+        agree = all(np.array_equal(np.sort(srv.query(r)), expected[i])
+                    for i, r in enumerate(rects))
+        st = srv.stats()
+        lags = {r["name"]: r["lag_frames"] for r in st["replicas"]}
+        print(f"  shipped {st['ship']['shipped_frames']} frames "
+              f"({st['ship']['shipped_bytes']} B); faults "
+              f"{st['transport_faults']}; replica lag {lags}")
+        print(f"  routed {st['reads']['replica']} reads to replicas: "
+              f"{'bit-identical to primary' if agree else 'MISMATCH'}")
+        assert agree and all(v == 0 for v in lags.values())
+
+        print("== primary dies mid-stream; promote ==")
+        srv.insert(pool[1200:1400])       # acked, but replicas not yet pumped
+        srv.kill_primary()
+        acked = srv.acked
+        promoted = srv.promote()
+        print(f"  promoted {promoted.name}: frontier {promoted.frontier} "
+              f">= last ack {acked}; no acknowledged write lost")
+        srv.insert(pool[1400:1600])
+        srv.delete(np.arange(50))
+        srv.tick()
+        post = [np.sort(srv.primary.query(r)) for r in rects]
+        agree2 = all(np.array_equal(np.sort(srv.query(r)), post[i])
+                     for i, r in enumerate(rects))
+        st = srv.stats()
+        print(f"  serving resumed under {st['primary_dir']}: replicas "
+              f"re-seeded, {'answers bit-identical' if agree2 else 'MISMATCH'}"
+              f"; promotions={st['promotions']}")
+        assert agree2
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+
+
 def main_durable():
     """Kill-and-resume: journal, crash (torn WAL tail included), recover."""
     import os
@@ -34,6 +104,7 @@ def main_durable():
     from repro.core import COAXIndex, CoaxConfig
     from repro.data import knn_rect_queries, make_airline
     from repro.engine import QueryServer
+    from repro.runtime.failure import GracefulShutdown
     from repro.storage import read_manifest, latest_snapshot, wal_path
 
     workdir = Path(tempfile.mkdtemp(prefix="coax_durable_"))
@@ -90,6 +161,23 @@ def main_durable():
         srv2.executor.index.durable.sync()
         print(f"  resumed journaling: "
               f"{srv2.stats()['wal_records']} records in the live WAL")
+
+        print("== process 2: SIGTERM -> graceful shutdown ==")
+        with GracefulShutdown() as stop:
+            srv2.shutdown = stop
+            for r in rects:
+                srv2.submit(r)
+            srv2.insert(pool[1300:1400])
+            partial = srv2.drain(max_waves=1)   # mid-stream...
+            stop.request()                      # ...the preemption notice lands
+            partial.update(srv2.drain())        # finishes in-flight, forms no more
+            srv2.close()                        # flush writes + fsync + release WAL
+        s2 = srv2.stats()
+        print(f"  answered {len(partial)} before the flag; {s2['pending']} "
+              f"queries left for the next incarnation; writes flushed "
+              f"(pending={s2['writes_pending']}), WAL synced, "
+              f"closed={s2['closed']}")
+        assert s2["writes_pending"] == 0 and s2["closed"]
     finally:
         shutil.rmtree(workdir, ignore_errors=True)
 
@@ -137,5 +225,12 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--durable", action="store_true",
                     help="kill-and-resume durability demo (DESIGN.md §7)")
+    ap.add_argument("--failover", action="store_true",
+                    help="replicated failover demo (DESIGN.md §8)")
     args = ap.parse_args()
-    main_durable() if args.durable else main()
+    if args.failover:
+        main_failover()
+    elif args.durable:
+        main_durable()
+    else:
+        main()

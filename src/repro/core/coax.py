@@ -397,6 +397,10 @@ class COAXIndex:
         self.compactions += 1
         self._fit()
         self.backend = bk
+        # what THIS compaction decided, for the rotation control frame a
+        # replication hub ships (DESIGN.md §8.2) — a replica whose own
+        # trigger did not fire replays the same decision verbatim
+        self._last_compact_relearned = relearned
         if self.durable is not None:
             # new epoch snapshot + WAL rotation — the §7.5 truncation point
             self.durable.on_compact(self)

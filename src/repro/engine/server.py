@@ -60,16 +60,24 @@ class QueryServer:
         stamped with the journal position, DESIGN.md §7) every this many
         drained waves; None disables the cadence.  No-op unless the index
         has a durability plane attached.
+    shutdown : a ``runtime.failure.GracefulShutdown`` to honour: when its
+        flag flips (SIGTERM on a managed host), ``drain`` finishes the
+        in-flight wave, stops forming new ones, and returns — the caller
+        then runs ``close()`` (flush queued writes, fsync the WAL, release
+        the handle) and exits cleanly instead of dying mid-wave.
     """
 
     def __init__(self, index, max_batch: int = 64,
                  executor: Optional[BatchQueryExecutor] = None,
                  backend: Optional[str] = None,
                  shards: Optional[int] = None,
-                 checkpoint_every: Optional[int] = None):
+                 checkpoint_every: Optional[int] = None,
+                 shutdown=None):
         self.executor = executor or BatchQueryExecutor(
             index, max_batch=max_batch, backend=backend, shards=shards)
         self.checkpoint_every = checkpoint_every
+        self.shutdown = shutdown
+        self.closed = False
         self._pending: Dict[int, PendingQuery] = {}
         self._ids = itertools.count()
         self._write_queue: List[Tuple[int, str, object]] = []
@@ -208,6 +216,8 @@ class QueryServer:
         while self._pending or self._write_queue:
             if max_waves is not None and waves_this_call >= max_waves:
                 break
+            if self.shutdown_requested:
+                break                      # in-flight waves still collected
             self.flush_writes()
             if dur is not None:
                 dur.sync()
@@ -241,6 +251,24 @@ class QueryServer:
         return results
 
     # ------------------------------------------------------------------ #
+    # Graceful shutdown (DESIGN.md §8.1)
+    # ------------------------------------------------------------------ #
+    @property
+    def shutdown_requested(self) -> bool:
+        return self.shutdown is not None and self.shutdown.requested
+
+    def close(self) -> None:
+        """Orderly exit: apply every queued write, fsync the journal tail,
+        release the WAL handle.  Idempotent (the durability plane's close
+        is), so signal handlers and ``finally`` blocks can both call it."""
+        self.flush_writes()
+        dur = getattr(self.executor.index, "durable", None)
+        if dur is not None:
+            dur.sync()
+            dur.close()
+        self.closed = True
+
+    # ------------------------------------------------------------------ #
     def __len__(self) -> int:
         return len(self._pending)
 
@@ -259,6 +287,8 @@ class QueryServer:
             delta_rows=int(getattr(index, "delta_rows", 0)),
             tombstones=int(getattr(index, "tombstone_count", 0)),
             checkpoints_written=self.checkpoints_written,
+            shutdown_requested=self.shutdown_requested,
+            closed=self.closed,
         )
         dur = getattr(index, "durable", None)
         if dur is not None:

@@ -15,7 +15,8 @@ import threading
 import time
 from typing import Callable, List, Optional
 
-__all__ = ["GracefulShutdown", "retry", "StragglerDetector", "FailureInjector"]
+__all__ = ["GracefulShutdown", "retry", "StragglerDetector",
+           "FailureInjector", "FaultPlan"]
 
 
 class GracefulShutdown:
@@ -140,3 +141,65 @@ class FailureInjector:
         if step in self.fail_at and step not in self.fired:
             self.fired.add(step)
             raise self.exc(f"injected failure at step {step}")
+
+
+class FaultPlan(FailureInjector):
+    """Deterministic multi-channel fault schedule (DESIGN.md §8.5).
+
+    Generalises ``FailureInjector``'s step-indexed crashes to NAMED
+    channels, each with its own auto-incrementing event counter, so one
+    plan scripts an entire partial-failure scenario: shipped-frame drops
+    and tears on the replication transport, replica crashes mid-apply,
+    a primary kill mid-rotation — every injection keyed by (channel,
+    event index) and therefore exactly reproducible.
+
+    ``schedule`` maps ``channel -> {event_index: action}``.  Actions are
+    strings or tuples, interpreted by the instrumented component:
+
+    * transport send channels (``"ship.<replica>"``): ``"drop"``, ``"dup"``,
+      ``"reorder"`` (hold one frame, release after the next), ``"tear"`` /
+      ``("tear", keep_bytes)`` (deliver a truncated frame),
+      ``("delay", n)`` (hold for n sends), ``"error"`` /
+      ``("error", n)`` (raise ``TransportError`` n times — exercises
+      retry+backoff);
+    * apply channels (``"<replica>.apply"``): ``"crash"`` — the component
+      calls ``crash_if`` and dies mid-apply;
+    * rotation channel (``"primary.rotate"``): ``"crash"`` — primary dies
+      mid-compaction-rotation, after the new epoch pair is published and
+      before old WALs are deleted.
+
+    Every consumed action lands in ``self.log`` and the per-action tallies
+    in ``counts()`` — the observability surface the serving stats report.
+    """
+
+    def __init__(self, schedule=None, exc=RuntimeError):
+        super().__init__((), exc)
+        self.schedule = {str(c): dict(m) for c, m in (schedule or {}).items()}
+        self.counters = {}
+        self.log = []                    # [(channel, event_index, action)]
+
+    def action(self, channel: str):
+        """Consume one event on ``channel``; returns the scheduled action
+        for this event index (logged), or None."""
+        step = self.counters.get(channel, 0)
+        self.counters[channel] = step + 1
+        act = self.schedule.get(channel, {}).get(step)
+        if act is not None:
+            self.log.append((channel, step, act))
+            self.fired.add((channel, step))
+        return act
+
+    def crash_if(self, channel: str) -> None:
+        """Consume one event; raise ``exc`` when it is scheduled as a
+        ``"crash"`` (the named-channel ``maybe_fail``)."""
+        if self.action(channel) == "crash":
+            raise self.exc(f"injected crash on {channel} "
+                           f"(event {self.counters[channel] - 1})")
+
+    def counts(self) -> dict:
+        """{action_name: times_fired} over everything consumed so far."""
+        out = {}
+        for _, _, act in self.log:
+            name = act[0] if isinstance(act, tuple) else act
+            out[name] = out.get(name, 0) + 1
+        return out

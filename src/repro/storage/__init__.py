@@ -24,7 +24,8 @@ into a ``DevicePlan``).
 from . import atomic
 from .snapshot import (latest_snapshot, load_snapshot, read_manifest,
                        snapshot_nbytes, write_snapshot)
-from .wal import WalRecord, WriteAheadLog, read_wal, wal_path
+from .wal import (WalFrameCursor, WalRecord, WriteAheadLog, decode_record,
+                  read_wal, wal_path)
 from .durability import Durability, ShardedDurability, restore
 
 __all__ = [
@@ -35,7 +36,9 @@ __all__ = [
     "read_manifest",
     "snapshot_nbytes",
     "WriteAheadLog",
+    "WalFrameCursor",
     "WalRecord",
+    "decode_record",
     "read_wal",
     "wal_path",
     "Durability",

@@ -77,6 +77,28 @@ class Durability:
         self.last_snapshot_path: Optional[Path] = None
         self.last_snapshot_wal_seq = 0
         self.last_snapshot_bytes = 0
+        # Replication hooks (DESIGN.md §8): a ReplicationHub subscribes by
+        # setting these.  frame_observer(epoch, seq, kind, payload) fires on
+        # every journaled record; rotate_observer(old_epoch, old_final_seq,
+        # new_epoch, relearned) fires inside the §7.5 rotation, after the
+        # new epoch's snapshot+WAL are published and before old WALs die.
+        self.frame_observer = None
+        self.rotate_observer = None
+
+    def _open_wal(self, path: Path, epoch: int,
+                  start_seq: int = 0) -> WriteAheadLog:
+        """Every WAL this plane appends to routes records through
+        ``_frame_appended`` so a subscribed shipper sees rotations and
+        replays transparently (replayed records are NOT re-shipped — the
+        replica protocol reseeds instead, §8.4)."""
+        wal = WriteAheadLog(path, epoch, start_seq=start_seq)
+        wal.observer = self._frame_appended
+        return wal
+
+    def _frame_appended(self, epoch: int, seq: int, kind: int,
+                        payload: bytes) -> None:
+        if self.frame_observer is not None and not self._replaying:
+            self.frame_observer(epoch, seq, kind, payload)
 
     # ------------------------------------------------------------------ #
     @classmethod
@@ -112,7 +134,7 @@ class Durability:
         dur = cls(index, directory, keep=keep, sync_every_op=sync_every_op)
         dur._record_snapshot(write_snapshot(index, directory, wal_seq=0,
                                             keep=keep), 0)
-        dur.wal = WriteAheadLog(wal_file, index.epoch, start_seq=0)
+        dur.wal = dur._open_wal(wal_file, index.epoch, start_seq=0)
         index.durable = dur
         return dur
 
@@ -157,10 +179,19 @@ class Durability:
         self._record_snapshot(
             write_snapshot(index, self.directory, wal_seq=0, keep=self.keep), 0)
         old = self.wal
-        self.wal = WriteAheadLog(wal_path(self.directory, index.epoch),
-                                 index.epoch, start_seq=0)
+        self.wal = self._open_wal(wal_path(self.directory, index.epoch),
+                                  index.epoch, start_seq=0)
         if old is not None:
             old.close()
+        if self.rotate_observer is not None:
+            # mid-rotation ship point (§8.2): the new epoch pair is live on
+            # disk, the old WALs are not yet deleted — a crash raised from
+            # the observer models "primary died mid-compaction-rotation"
+            self.rotate_observer(old.epoch if old is not None else index.epoch - 1,
+                                 old.next_seq if old is not None else 0,
+                                 index.epoch,
+                                 bool(getattr(index, "_last_compact_relearned",
+                                              False)))
         for p in _wal_files(self.directory):
             if p != self.wal.path:
                 p.unlink(missing_ok=True)
@@ -178,7 +209,7 @@ class Durability:
         old = self.wal
         fresh = wal_path(self.directory, self.index.epoch)
         fresh.unlink(missing_ok=True)      # torn leftovers of a crashed pass
-        self.wal = WriteAheadLog(fresh, self.index.epoch, start_seq=0)
+        self.wal = self._open_wal(fresh, self.index.epoch, start_seq=0)
         for rec in tail_records:
             if rec.kind == OP_INSERT:
                 self.wal.append_insert(rec.rows, rec.ids)
@@ -220,8 +251,16 @@ class Durability:
         return path
 
     def close(self) -> None:
+        """fsync the WAL tail and release the handle.  Idempotent: a second
+        ``close()`` — or a close after a failed rotation left a dead handle
+        behind — is a no-op instead of raising from cleanup
+        (``WriteAheadLog.close`` carries the guard)."""
         if self.wal is not None:
             self.wal.close()
+
+    @property
+    def closed(self) -> bool:
+        return self.wal is None or self.wal.closed
 
     # ------------------------------------------------------------------ #
     @property
@@ -266,7 +305,7 @@ def _replay(index: COAXIndex, directory: Path, durable: bool,
             os.truncate(wfile, intact)    # drop the torn tail before appending
         dur = Durability(index, directory, keep=keep,
                          sync_every_op=sync_every_op)
-        dur.wal = WriteAheadLog(wfile, index.epoch, start_seq=next_seq)
+        dur.wal = dur._open_wal(wfile, index.epoch, start_seq=next_seq)
         dur._suppress_append = True
         dur._replaying = True
         latest = latest_snapshot(directory)
@@ -383,9 +422,16 @@ class ShardedDurability:
         return paths
 
     def close(self) -> None:
+        """fsync + close every shard's WAL; idempotent like the per-shard
+        ``Durability.close`` it fans out to."""
         for shard in self.sharded.shards:
             if shard.durable is not None:
                 shard.durable.close()
+
+    @property
+    def closed(self) -> bool:
+        return all(shard.durable is None or shard.durable.closed
+                   for shard in self.sharded.shards)
 
     @property
     def wal_pending_bytes(self) -> int:

@@ -26,6 +26,15 @@ contract), and ``pending_bytes`` is exactly the at-risk tail.  The reader
 treats ANY malformed tail — truncated header, short payload, CRC or magic
 or sequence mismatch — as a torn write: replay stops at the last intact
 record and ``Durability`` truncates the torn bytes before appending again.
+
+Replication hooks (DESIGN.md §8): the WAL is also the replication log.
+``observer`` — when set — sees every appended record ``(epoch, seq, kind,
+payload)`` at append time (the push-shipping hook), and ``WalFrameCursor``
+reads a WAL file's records incrementally from a sequence position (the
+pull/catch-up path): an incomplete tail merely pauses the cursor — the
+bytes may still be in flight from a concurrent appender — so re-reading
+later resumes where it stopped, while genuinely torn bytes pause it
+forever at the last intact record, exactly like ``read_wal``.
 """
 from __future__ import annotations
 
@@ -38,8 +47,8 @@ from typing import Iterator, List, Optional, Tuple, Union
 
 import numpy as np
 
-__all__ = ["WalRecord", "WriteAheadLog", "read_wal", "wal_path",
-           "OP_INSERT", "OP_DELETE"]
+__all__ = ["WalRecord", "WriteAheadLog", "WalFrameCursor", "read_wal",
+           "wal_path", "decode_record", "OP_INSERT", "OP_DELETE"]
 
 _FILE_MAGIC = b"CWH1"
 _REC_MAGIC = b"CWR1"
@@ -89,6 +98,14 @@ def _decode(kind: int, payload: bytes) -> Tuple[Optional[np.ndarray], np.ndarray
     raise ValueError(f"unknown WAL op kind {kind}")
 
 
+def decode_record(kind: int, payload: bytes) -> Tuple[Optional[np.ndarray],
+                                                      np.ndarray]:
+    """Decode one record payload -> ``(rows, ids)`` (rows None for deletes).
+    The public face of the record codec — replicas shipping raw WAL frames
+    (DESIGN.md §8) decode them with exactly the appender's arithmetic."""
+    return _decode(kind, payload)
+
+
 class WriteAheadLog:
     """Appender for one epoch's WAL file.
 
@@ -105,6 +122,7 @@ class WriteAheadLog:
         self.next_seq = int(start_seq)
         self.pending_bytes = 0          # appended since the last fsync
         self.pending_records = 0
+        self.observer = None            # callable(epoch, seq, kind, payload)
         fresh = not self.path.exists()
         self.path.parent.mkdir(parents=True, exist_ok=True)
         self._f = open(self.path, "ab")
@@ -122,6 +140,8 @@ class WriteAheadLog:
         self.next_seq += 1
         self.pending_bytes += len(hdr) + len(payload)
         self.pending_records += 1
+        if self.observer is not None:   # ship AFTER the journal has the record
+            self.observer(self.epoch, self.next_seq - 1, kind, payload)
         return self.next_seq - 1
 
     def append_insert(self, rows: np.ndarray, ids: np.ndarray) -> int:
@@ -134,8 +154,11 @@ class WriteAheadLog:
         return self._append(OP_DELETE, _encode_delete(ids))
 
     def sync(self) -> None:
-        """fsync the appended tail — the per-wave durability point."""
-        if self.pending_bytes:
+        """fsync the appended tail — the per-wave durability point.  Safe on
+        an already-closed handle: a closed file has either synced its tail
+        (orderly ``close``) or lost the handle to a failed rotation — both
+        cases where raising from a cleanup path helps nobody."""
+        if self.pending_bytes and not self._f.closed:
             self._f.flush()
             os.fsync(self._f.fileno())
             self.pending_bytes = 0
@@ -143,9 +166,15 @@ class WriteAheadLog:
 
     def nbytes(self) -> int:
         """Total WAL bytes on disk (header + records appended so far)."""
-        return self._f.tell()
+        return self.path.stat().st_size if self._f.closed else self._f.tell()
+
+    @property
+    def closed(self) -> bool:
+        return self._f.closed
 
     def close(self) -> None:
+        """fsync the tail, then close.  Idempotent: double-close (and close
+        after a failed rotation left the handle dead) is a no-op."""
         if not self._f.closed:
             self.sync()
             self._f.close()
@@ -196,3 +225,69 @@ def read_wal(path: Union[str, Path],
         off = end
         intact = off
     return records, len(records), intact
+
+
+class WalFrameCursor:
+    """Incremental reader of one WAL file's records from a seq position —
+    the replica catch-up path (DESIGN.md §8.2): the primary's WAL doubles
+    as the retransmission buffer, so a replica that lost shipped frames
+    pulls the gap straight out of the journal.
+
+    ``read()`` returns every intact ``(seq, kind, payload)`` appended since
+    the last call.  The cursor keeps a byte offset and only ever advances
+    past COMPLETE records, so a trailing partial record — an append still
+    in flight from a live primary, or a genuinely torn crash tail — just
+    pauses it: the next ``read()`` re-examines the same bytes and resumes
+    if the record completed.  Foreign bytes / CRC mismatch / seq mismatch
+    pause it the same way (and stay paused forever), matching ``read_wal``'s
+    torn-tail contract.  A missing file reads as empty.
+    """
+
+    def __init__(self, path: Union[str, Path], expect_epoch: Optional[int] = None,
+                 start_seq: int = 0):
+        self.path = Path(path)
+        self.expect_epoch = expect_epoch
+        self.next_seq = int(start_seq)
+        self._offset: Optional[int] = None    # None until the header is read
+        self._skip_seq = int(start_seq)       # records to skip before start_seq
+
+    def read(self, max_records: Optional[int] = None
+             ) -> List[Tuple[int, int, bytes]]:
+        """Intact ``(seq, kind, payload)`` frames available past the cursor."""
+        if not self.path.exists():
+            return []
+        blob = self.path.read_bytes()
+        if self._offset is None:
+            if len(blob) < _FILE_HDR.size:
+                return []                     # header still incomplete
+            magic, version, epoch = _FILE_HDR.unpack_from(blob, 0)
+            if magic != _FILE_MAGIC or version != _FORMAT_VERSION:
+                raise ValueError(f"{self.path} is not a v{_FORMAT_VERSION} WAL file")
+            if self.expect_epoch is not None and epoch != self.expect_epoch:
+                raise ValueError(f"{self.path} holds epoch {epoch}, "
+                                 f"expected {self.expect_epoch}")
+            self._offset = _FILE_HDR.size
+            self._seen = 0                    # records parsed from the top
+        out: List[Tuple[int, int, bytes]] = []
+        off = self._offset
+        while off + _REC_HDR.size <= len(blob):
+            if max_records is not None and len(out) >= max_records:
+                break
+            rmagic, seq, kind, plen, crc = _REC_HDR.unpack_from(blob, off)
+            end = off + _REC_HDR.size + plen
+            if rmagic != _REC_MAGIC or seq != self._seen or end > len(blob):
+                break                         # torn / in-flight / foreign tail
+            payload = blob[off + _REC_HDR.size:end]
+            if zlib.crc32(payload) & 0xFFFFFFFF != crc:
+                break
+            try:
+                _decode(kind, payload)        # validate before advancing
+            except (ValueError, struct.error):
+                break
+            if seq >= self._skip_seq:
+                out.append((seq, kind, payload))
+                self.next_seq = seq + 1
+            self._seen += 1
+            off = end
+            self._offset = off
+        return out
