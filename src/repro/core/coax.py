@@ -18,15 +18,23 @@ Query path (``COAXIndex.query``):
 
 Write path (DESIGN.md §5): the two grid files are *epoch-versioned frozen
 snapshots*; ``insert``/``delete`` land in per-sub-index ``DeltaPlane``s
-(append log + tombstones, scanned exactly per query) and every query unions
-(snapshot − tombstones) ∪ delta.  Inserts are margin-checked against the
-learned FD groups — in-margin rows feed the primary delta, violators the
-outlier delta — and stream into per-model ``BayesianLinearModel`` trackers
-so FD drift is measured from live sufficient statistics (§5: 'continuously
-adjust our existing model').  ``compact()`` merges deltas into rebuilt
-snapshots and bumps the epoch; it fires automatically on delta size, or on
-drift when the §7.2 predictability ratio (``theory.met_drifted_expectation``)
-says the frozen slopes have decayed.
+(append log + tombstones, organized into tiered sorted runs, §5.3) and
+every query unions (snapshot − tombstones) ∪ delta.  Inserts are
+margin-checked against the learned FD groups — in-margin rows feed the
+primary delta, violators the outlier delta — and stream into per-model
+``BayesianLinearModel`` trackers so FD drift is measured from live
+sufficient statistics (§5: 'continuously adjust our existing model').
+``compact()`` merges deltas into rebuilt snapshots and bumps the epoch; it
+fires automatically on delta size, or on drift when the §7.2 predictability
+ratio (``theory.met_drifted_expectation``) says the frozen slopes have
+decayed.  Trigger evaluation is amortized (every ``compact_check_rows``
+written rows or on an L0 spill — ``maybe_compact``), and with
+``background_compact`` the rebuild itself moves off the serving thread:
+``_begin_background_compact`` freezes the live row set and builds the next
+epoch on a daemon thread while the old epoch keeps serving; ``poll_handoff``
+installs the finished build at the next write/query/wave boundary and
+replays the writes admitted during the build into the new epoch (the
+epoch-handoff state machine, DESIGN.md §5.4).
 
 Durability (DESIGN.md §7): ``attach_durability`` hooks a ``storage``
 durability plane onto the write path — every ``insert``/``delete`` appends
@@ -40,6 +48,8 @@ never-crashed one on every backend.
 from __future__ import annotations
 
 import dataclasses
+import threading
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -49,7 +59,8 @@ from .delta import DeltaPlane
 from .gridfile import BatchStats, GridFile, fit_cells_per_dim
 from .softfd import BayesianLinearModel, SoftFDConfig, learn_soft_fds
 from .translate import reduced_dims, translate_rect, translate_rects
-from .types import FDGroup, Rect, full_rect, rect_contains, split_hits
+from .types import (FDGroup, Rect, full_rect, rect_contains, sorted_contains,
+                    split_hits)
 
 __all__ = ["CoaxConfig", "COAXIndex"]
 
@@ -72,6 +83,19 @@ class CoaxConfig:
                                       # predictability ratio drops below this
     drift_min_delta: int = 256        # drift trigger needs this much fresh data
     drift_seed_rows: int = 4096       # rows seeding the live FD trackers
+    drift_track_k: float = 6.0        # slope trackers only ingest rows within
+                                      # the margin band expanded by k*width —
+                                      # gross violators feed the violation-MASS
+                                      # statistic instead (mirrors robust_k)
+
+    # --- LSM write path (DESIGN.md §5.3–§5.4) --------------------------- #
+    background_compact: bool = False  # build the next epoch on a daemon
+                                      # thread, swap at an atomic handoff
+    compact_check_rows: int = 64      # amortize trigger checks: evaluate
+                                      # once per this-many written rows (or
+                                      # on an L0 spill), not every write
+    delta_l0_spill: int = 256         # delta L0 rows that spill into a
+                                      # sorted run (§5.3)
 
 
 class COAXIndex:
@@ -113,8 +137,26 @@ class COAXIndex:
         self._device_plan_failed = False
         self.last_batch_stats = BatchStats()
         self.durable = None             # storage.Durability, via attach_durability
+        self._init_write_state()
         self._fit()
         self.backend = backend
+
+    def _init_write_state(self) -> None:
+        """Amortized-trigger counters + background-handoff machinery
+        (DESIGN.md §5.3–§5.4), fresh — shared by build and restore."""
+        self._write_units = 0           # rows written since the last check
+        self._spill_pending = False     # an L0 spill since the last check
+        self.trigger_checks = 0         # full trigger evaluations ever run
+        self.background_compactions = 0  # handoffs installed
+        self.last_handoff_s = 0.0       # build-start → install latency
+        self._handoff_t0 = 0.0
+        self._handoff_thread = None     # the in-flight compactor thread
+        self._handoff_result = None     # [None] | [("ok", fitted, relearned)]
+        self._handoff_ops = None        # writes admitted during the build
+        self._in_handoff_replay = False
+        self._last_compact_relearned = False
+        self._viol_total = {}           # per-group arriving-row counts and
+        self._viol_bad = {}             # margin violations since tracker reseed
 
     # ------------------------------------------------------------------ #
     @property
@@ -144,17 +186,29 @@ class COAXIndex:
 
     # ------------------------------------------------------------------ #
     def _fit(self) -> None:
+        self._install_fit(self._fit_state(self.data, self.row_ids,
+                                          self.groups, self.epoch))
+
+    def _fit_state(self, data: np.ndarray, row_ids: np.ndarray,
+                   groups: Sequence[FDGroup], epoch: int) -> dict:
+        """Pure fit: build both epoch grids, the base id partitions, the
+        §8.2.3 bbox and the tracker seeds for ``data`` under ``groups``,
+        stamped ``epoch`` — NO self mutation.  Reads only immutable config,
+        so the §5.4 background compactor thread can run it against a frozen
+        row set while the serving thread keeps answering from the old epoch
+        (``_install_fit`` is the serving-thread half of the handoff)."""
         cfg = self.config
-        self._coax_plan = None     # new-epoch grids invalidate the §4 plan
-        n = self.data.shape[0]
+        n = data.shape[0]
+        n_dims = data.shape[1]
+        keep_dims = reduced_dims(n_dims, groups)
         # Split into primary (all groups' margins hold) and outliers.
         inlier = np.ones(n, dtype=bool)
-        for g in self.groups:
-            inlier &= g.inlier_mask(self.data)
-        self.primary_ratio = float(inlier.mean()) if n else 0.0
+        for g in groups:
+            inlier &= g.inlier_mask(data)
+        primary_ratio = float(inlier.mean()) if n else 0.0
 
-        p_rows, p_ids = self.data[inlier], self.row_ids[inlier]
-        o_rows, o_ids = self.data[~inlier], self.row_ids[~inlier]
+        p_rows, p_ids = data[inlier], row_ids[inlier]
+        o_rows, o_ids = data[~inlier], row_ids[~inlier]
 
         # Sorted dim: the kept dim with the widest normalised spread by
         # default — maximises the benefit of in-cell binary search.
@@ -162,76 +216,121 @@ class COAXIndex:
             sort_dim = cfg.sort_dim
         elif n:
             spread = [
-                float(np.std(self.data[:, d])) / (float(np.ptp(self.data[:, d])) or 1.0)
-                for d in self.keep_dims
+                float(np.std(data[:, d])) / (float(np.ptp(data[:, d])) or 1.0)
+                for d in keep_dims
             ]
-            sort_dim = self.keep_dims[int(np.argmax(spread))] if self.keep_dims else 0
+            sort_dim = keep_dims[int(np.argmax(spread))] if keep_dims else 0
         else:
-            sort_dim = self.keep_dims[0] if self.keep_dims else 0
+            sort_dim = keep_dims[0] if keep_dims else 0
 
-        budget_cells = max(int(self.data.nbytes * cfg.directory_budget_frac) // 8, 1)
-        n_grid = max(len(self.keep_dims) - 1, 0)
+        budget_cells = max(int(data.nbytes * cfg.directory_budget_frac) // 8, 1)
+        n_grid = max(len(keep_dims) - 1, 0)
         target = max(int(p_rows.shape[0] / cfg.rows_per_cell), 1)
         auto = max(int(round(target ** (1.0 / max(n_grid, 1)))), 2)
         p_cells = cfg.primary_cells_per_dim or min(
             auto, fit_cells_per_dim(max(n_grid, 1), budget_cells))
-        self.primary = GridFile(
-            p_rows, index_dims=self.keep_dims, cells_per_dim=p_cells,
-            sort_dim=sort_dim if self.keep_dims else None, quantile=True, row_ids=p_ids,
-            device_opts=self._device_opts, epoch=self.epoch,
+        primary = GridFile(
+            p_rows, index_dims=keep_dims, cells_per_dim=p_cells,
+            sort_dim=sort_dim if keep_dims else None, quantile=True, row_ids=p_ids,
+            device_opts=self._device_opts, epoch=epoch,
         )
 
         # Outlier index: full-dimensional quantile grid with its own (much
         # smaller) budget — outliers are typically a few % of rows.
         o_budget = max(int(o_rows.nbytes * cfg.directory_budget_frac) // 8, 1)
         o_target = max(int(o_rows.shape[0] / cfg.rows_per_cell), 1)
-        o_auto = max(int(round(o_target ** (1.0 / max(self.n_dims - 1, 1)))), 2)
+        o_auto = max(int(round(o_target ** (1.0 / max(n_dims - 1, 1)))), 2)
         o_cells = cfg.outlier_cells_per_dim or min(
-            o_auto, fit_cells_per_dim(max(self.n_dims - 1, 1), o_budget))
-        self.outlier = GridFile(
-            o_rows, index_dims=list(range(self.n_dims)), cells_per_dim=o_cells,
+            o_auto, fit_cells_per_dim(max(n_dims - 1, 1), o_budget))
+        outlier = GridFile(
+            o_rows, index_dims=list(range(n_dims)), cells_per_dim=o_cells,
             sort_dim=sort_dim, quantile=True, row_ids=o_ids,
-            device_opts=self._device_opts, epoch=self.epoch,
+            device_opts=self._device_opts, epoch=epoch,
         )
 
-        # Bounding box of outliers lets us skip the outlier probe entirely
-        # for queries that cannot touch it (§8.2.3).
-        if o_rows.shape[0]:
-            self._outlier_lo = o_rows.min(axis=0)
-            self._outlier_hi = o_rows.max(axis=0)
-        else:
-            self._outlier_lo = None
-            self._outlier_hi = None
+        trackers, x_scale = self._seed_tracker_state(groups, p_rows)
+        return {
+            "data": data, "row_ids": row_ids, "epoch": epoch,
+            "groups": list(groups), "keep_dims": keep_dims,
+            "primary_ratio": primary_ratio,
+            "primary": primary, "outlier": outlier,
+            # §8.2.3: outlier bbox lets queries skip the outlier probe
+            "outlier_lo": o_rows.min(axis=0) if o_rows.shape[0] else None,
+            "outlier_hi": o_rows.max(axis=0) if o_rows.shape[0] else None,
+            # sorted base id partitions (delete classification)
+            "base_primary_ids": np.sort(p_ids),
+            "base_outlier_ids": np.sort(o_ids),
+            "trackers": trackers, "x_scale": x_scale,
+        }
 
-        # Mutable plane of THIS epoch: sorted base id partitions (delete
-        # classification), empty delta planes, reseeded FD drift trackers.
-        self._base_primary_ids = np.sort(p_ids)
-        self._base_outlier_ids = np.sort(o_ids)
-        self.delta_primary = DeltaPlane(self.n_dims)
-        self.delta_outlier = DeltaPlane(self.n_dims)
-        self._seed_trackers(p_rows)
+    def _install_fit(self, fitted: dict) -> None:
+        """Adopt a ``_fit_state`` result as the CURRENT epoch — the atomic
+        serving-thread half of the §5.4 handoff.  Swapping ``primary`` /
+        ``outlier`` is what invalidates any frozen device plan (identity
+        check in ``_device_plan_obj``); fresh delta planes are keyed on the
+        new groups' first dependent (``_delta_key_dim``).  The stale device
+        plan is deliberately KEPT on ``_coax_plan``: the identity check in
+        ``_device_plan_obj`` rebuilds against the new grids on the next
+        wave, and the rebuild ``adopt()``s the stale plan's jit cache so a
+        compaction costs zero recompiles (pow2-bucketed image shapes)."""
+        self.data = fitted["data"]
+        self.row_ids = fitted["row_ids"]
+        self.epoch = int(fitted["epoch"])
+        self.groups = fitted["groups"]
+        self.keep_dims = fitted["keep_dims"]
+        self.primary_ratio = fitted["primary_ratio"]
+        self.primary = fitted["primary"]
+        self.outlier = fitted["outlier"]
+        self._outlier_lo = fitted["outlier_lo"]
+        self._outlier_hi = fitted["outlier_hi"]
+        self._base_primary_ids = fitted["base_primary_ids"]
+        self._base_outlier_ids = fitted["base_outlier_ids"]
+        self._fd_trackers = fitted["trackers"]
+        self._x_scale = fitted["x_scale"]
+        # violation-mass counters restart with the reseeded trackers: the
+        # new margins absorbed (or re-rejected) the old epoch's violators
+        self._viol_total = {gi: 0 for gi in range(len(self.groups))}
+        self._viol_bad = {gi: 0 for gi in range(len(self.groups))}
+        kd, spill = self._delta_key_dim(), self.config.delta_l0_spill
+        self.delta_primary = DeltaPlane(self.n_dims, key_dim=kd, l0_spill=spill)
+        self.delta_outlier = DeltaPlane(self.n_dims, key_dim=kd, l0_spill=spill)
 
-    def _seed_trackers(self, inlier_rows: np.ndarray) -> None:
+    def _delta_key_dim(self) -> int:
+        """Run key for the delta planes (DESIGN.md §5.3): the first FD
+        dependent (Eq. 2 maps query ranges onto dependents, so key windows
+        stay selective), else the primary's sort dim.  Derived from the
+        current groups — never serialized — so live, restored and replica
+        planes agree by construction."""
+        for g in self.groups:
+            for dep in g.dependents:
+                return int(dep)
+        sd = getattr(self.primary, "sort_dim", None) if hasattr(self, "primary") else None
+        return int(sd) if sd is not None else 0
+
+    def _seed_tracker_state(self, groups: Sequence[FDGroup],
+                            inlier_rows: np.ndarray):
         """Per-(group, dependent) live Bayesian models, seeded from a sample
         of the snapshot's IN-MARGIN rows so the posterior slope starts at the
         frozen trend (outlier mass would bias the seed away from the robust
-        fit and fake drift at epoch start)."""
+        fit and fake drift at epoch start).  Pure: returns (trackers,
+        x_scale) without touching self."""
         cfg = self.config
         n = inlier_rows.shape[0]
         rng = np.random.default_rng(cfg.softfd.seed + 2)
         take = (rng.choice(n, size=min(cfg.drift_seed_rows, n), replace=False)
                 if n else np.empty(0, np.int64))
         sample = inlier_rows[take].astype(np.float64)
-        self._fd_trackers: Dict[Tuple[int, int], BayesianLinearModel] = {}
-        self._x_scale: Dict[int, float] = {}
-        for gi, g in enumerate(self.groups):
+        trackers: Dict[Tuple[int, int], BayesianLinearModel] = {}
+        x_scale: Dict[int, float] = {}
+        for gi, g in enumerate(groups):
             x = sample[:, g.predictor] if sample.size else np.empty(0)
-            self._x_scale[gi] = float(np.std(x)) if x.size else 1.0
+            x_scale[gi] = float(np.std(x)) if x.size else 1.0
             for dep in g.dependents:
                 blm = BayesianLinearModel.empty(cfg.softfd.ridge_lambda)
                 if x.size:
                     blm.update(x, sample[:, dep])
-                self._fd_trackers[(gi, dep)] = blm
+                trackers[(gi, dep)] = blm
+        return trackers, x_scale
 
     # ------------------------------------------------------------------ #
     # Write path (DESIGN.md §5)
@@ -251,6 +350,7 @@ class COAXIndex:
         caller is responsible for never reusing an id.  Default: the index's
         own ``arange`` sequence.
         """
+        self._poll_entry()
         rows = np.ascontiguousarray(np.atleast_2d(np.asarray(rows, dtype=np.float32)))
         if rows.ndim != 2 or rows.shape[1] != self.n_dims:
             raise ValueError(f"rows must be (m, {self.n_dims}), got {rows.shape}")
@@ -268,15 +368,39 @@ class COAXIndex:
             return ids
         if self.durable is not None:    # WAL before memory (DESIGN.md §7.2)
             self.durable.log_insert(rows, ids)
+        if self._handoff_ops is not None and not self._in_handoff_replay:
+            # a background build is in flight: remember the op so the new
+            # epoch can replay it after the handoff (DESIGN.md §5.4)
+            self._handoff_ops.append(("i", rows, ids.copy()))
         inlier = np.ones(m, dtype=bool)
-        for g in self.groups:
-            inlier &= g.inlier_mask(rows)
-        self.delta_primary.insert(rows[inlier], ids[inlier])
-        self.delta_outlier.insert(rows[~inlier], ids[~inlier])
+        for gi, g in enumerate(self.groups):
+            gm = g.inlier_mask(rows)
+            # violation MASS per group: the contamination-vs-drift statistic
+            # (``drift_predictability``) — a minority of gross violators is
+            # outlier-plane work, a majority is a regime change
+            self._viol_total[gi] += m
+            self._viol_bad[gi] += int(m - gm.sum())
+            inlier &= gm
+        spilled = self.delta_primary.insert(rows[inlier], ids[inlier])
+        spilled += self.delta_outlier.insert(rows[~inlier], ids[~inlier])
         x64 = rows.astype(np.float64)
+        k = self.config.drift_track_k
         for (gi, dep), blm in self._fd_trackers.items():
             g = self.groups[gi]
-            blm.update(x64[:, g.predictor], x64[:, dep])
+            model = g.models[dep]
+            x, d = x64[:, g.predictor], x64[:, dep]
+            # robust slope tracking: only rows within the margin band
+            # expanded by k*width update the posterior — gross violators
+            # would drag the slope and fake drift (they are contamination,
+            # measured by the mass counters above, not slope movement)
+            slack = k * max(model.width, 1e-12)
+            r = d - (model.m * x + model.b)
+            band = (r >= -model.eps_lb - slack) & (r <= model.eps_ub + slack)
+            if band.any():
+                blm.update(x[band], d[band])
+        self._write_units += m
+        if spilled:
+            self._spill_pending = True
         if self.config.auto_compact:
             self.maybe_compact()
         return ids
@@ -289,11 +413,15 @@ class COAXIndex:
         matching plane (so each sub-index's hits are masked by exactly its
         own plane).  Unknown or already-dead ids are ignored.
         """
+        self._poll_entry()
         ids = np.unique(np.asarray(row_ids, dtype=np.int64).reshape(-1))
         if ids.size == 0:
             return 0
         if self.durable is not None:    # WAL before memory (DESIGN.md §7.2)
             self.durable.log_delete(ids)
+        if self._handoff_ops is not None and not self._in_handoff_replay:
+            self._handoff_ops.append(("d", ids.copy()))
+        self._write_units += int(ids.size)
         removed = 0
         absorbed = self.delta_primary.tombstone_log(ids)
         removed += int(absorbed.sum())
@@ -301,10 +429,12 @@ class COAXIndex:
         absorbed = self.delta_outlier.tombstone_log(ids)
         removed += int(absorbed.sum())
         ids = ids[~absorbed]
-        in_p = np.isin(ids, self._base_primary_ids)
+        # base id arrays are sorted (``_fit_state``): binary-search
+        # membership instead of ``isin`` re-sorting 50k ids per delete
+        in_p = sorted_contains(self._base_primary_ids, ids)
         removed += self.delta_primary.tombstone_base(ids[in_p])
         rest = ids[~in_p]
-        in_o = np.isin(rest, self._base_outlier_ids)
+        in_o = sorted_contains(self._base_outlier_ids, rest)
         removed += self.delta_outlier.tombstone_base(rest[in_o])
         if self.config.auto_compact:
             self.maybe_compact()
@@ -312,7 +442,8 @@ class COAXIndex:
 
     # ------------------------------------------------------------------ #
     def drift_predictability(self) -> float:
-        """§7.2 predictability of the frozen models against live statistics.
+        """§7.2 predictability of the frozen models against live statistics
+        (the drift-vs-contamination statistic, DESIGN.md §5.2).
 
         For each (group, dependent) model, the live posterior slope's
         mismatch ``d = |m_live − m_frozen| · std(x)`` is scored with the
@@ -320,8 +451,21 @@ class COAXIndex:
         ``met_drifted_expectation(ε, σ, d) / met_expectation(ε, σ)``
         (= tanh(u)/u, u = εd/σ²) with ε = half the margin width and the
         σ = ε/2 convention; 1.0 = no drift, →0 as the frozen slope decays.
-        Returns the minimum over all models (the weakest link triggers the
-        relearn), or 1.0 when no FDs are tracked.
+
+        The slope trackers are ROBUST (``drift_track_k``): gross margin
+        violators never enter the posterior, so a contamination burst — a
+        minority of rows following a different trend, which the write path
+        already routes to the outlier delta — cannot fake slope drift and
+        trigger a relearn that would return the very same models.  What
+        gross violators feed instead is the per-group violation-MASS
+        fraction; its complement ``1 − bad/total`` joins the min, so a
+        MAJORITY of arriving rows breaking a margin (a genuine regime
+        change, where relearning finds different models) still degrades
+        predictability below any sane threshold.
+
+        Returns the minimum over all models and mass fractions (the
+        weakest link triggers the relearn), or 1.0 when no FDs are
+        tracked.
         """
         worst = 1.0
         for (gi, dep), blm in self._fd_trackers.items():
@@ -335,34 +479,175 @@ class COAXIndex:
             ratio = (theory.met_drifted_expectation(eps, sigma, d)
                      / theory.met_expectation(eps, sigma))
             worst = min(worst, float(ratio))
+        for gi, total in self._viol_total.items():
+            if total:
+                worst = min(worst, 1.0 - self._viol_bad[gi] / total)
         return worst
 
     def maybe_compact(self) -> bool:
-        """Fire ``compact()`` when a trigger holds (DESIGN.md §5):
+        """Evaluate the compaction triggers (DESIGN.md §5) — AMORTIZED: the
+        size+drift evaluation only runs once per ``compact_check_rows``
+        written rows, or when a delta L0 spill signalled that the write
+        plane grew a run (§5.3); evaluations are counted in
+        ``trigger_checks``.  The counters are serialized with the index, so
+        check timing — and therefore every auto-compaction decision — is
+        bit-reproducible across snapshot/restore and WAL replay (§7.3).
 
         * size — delta load (live inserts + tombstones) exceeds both
           ``compact_min_delta`` and ``compact_delta_frac`` of the snapshot;
         * drift — predictability fell below ``drift_threshold`` with at
           least ``drift_min_delta`` of fresh delta evidence (the relearn
           path: compaction re-runs ``learn_soft_fds``).
+
+        With ``background_compact`` a fired trigger starts a §5.4
+        background build instead of compacting synchronously — except
+        during WAL replay and during the handoff tail replay, both of
+        which compact SYNCHRONOUSLY: replay must land on the same state a
+        single-threaded run of the same ops would (§7.3), so a trigger
+        firing mid-replay fires exactly where the sync world fires it.
         """
+        if self._handoff_thread is not None:
+            # one build at a time: fold it in if done, else keep serving
+            return self.poll_handoff()
         cfg = self.config
+        if self._write_units < cfg.compact_check_rows and not self._spill_pending:
+            return False
+        self._write_units = 0
+        self._spill_pending = False
+        self.trigger_checks += 1
         load = self.delta_rows + self.tombstone_count
         size_trigger = load >= max(cfg.compact_min_delta,
                                    int(cfg.compact_delta_frac * max(self.data.shape[0], 1)))
         drift_trigger = (load >= cfg.drift_min_delta
                          and self.drift_predictability() < cfg.drift_threshold)
-        if size_trigger or drift_trigger:
-            self.compact(relearn=drift_trigger or None)
+        if not (size_trigger or drift_trigger):
+            return False
+        if (cfg.background_compact and not self._in_handoff_replay
+                and not (self.durable is not None and self.durable._replaying)):
+            self._begin_background_compact(relearn=drift_trigger or None)
             return True
-        return False
+        self.compact(relearn=drift_trigger or None)
+        return True
+
+    # ------------------------------------------------------------------ #
+    # Background compaction + epoch handoff (DESIGN.md §5.4)
+    # ------------------------------------------------------------------ #
+    def _poll_entry(self) -> None:
+        """Cheap per-call handoff check at write/query entry points."""
+        if self._handoff_thread is not None:
+            self.poll_handoff()
+
+    def _begin_background_compact(self, relearn: Optional[bool]) -> None:
+        """Kick off the §5.4 background build: freeze the live row set,
+        decide the relearn flag NOW (from the serving thread's trackers —
+        the decision is part of the rotation contract a replica replays,
+        §8.2), and hand the pure ``_fit_state`` to a daemon thread.  The
+        old epoch keeps serving; writes admitted during the build land in
+        its delta planes AND are recorded for the post-handoff tail replay.
+        """
+        rows, ids = self.live_rows()           # the frozen build input
+        data = np.ascontiguousarray(rows, dtype=np.float32)
+        row_ids = np.asarray(ids, dtype=np.int64).copy()
+        if relearn is None:
+            relearn = self.drift_predictability() < self.config.drift_threshold
+        relearned = bool(relearn) and data.shape[0] >= 64
+        epoch = self.epoch + 1
+        groups_in = list(self.groups)
+        cfg = self.config
+        result = [None]
+
+        def _build():
+            try:
+                groups = (learn_soft_fds(data, cfg.softfd)
+                          if relearned else groups_in)
+                result[0] = ("ok",
+                             self._fit_state(data, row_ids, groups, epoch),
+                             relearned)
+            except BaseException as e:         # surfaced at the next poll
+                result[0] = ("err", e)
+
+        self._handoff_ops = []
+        self._handoff_result = result
+        self._handoff_t0 = time.perf_counter()
+        t = threading.Thread(target=_build, name="coax-compactor", daemon=True)
+        self._handoff_thread = t
+        t.start()
+
+    def poll_handoff(self, wait: bool = False) -> bool:
+        """Fold a finished background build into the serving state — the
+        atomic epoch handoff (DESIGN.md §5.4).  Called at every write/query
+        entry and at wave boundaries; ``wait=True`` blocks for an in-flight
+        build (``finish_handoff`` — the graceful-shutdown join).  Returns
+        True iff a handoff was installed.  SERVING THREAD ONLY: installation
+        swaps the plan the next wave is answered from.
+
+        Install order (crash-safe, §7.5): adopt the built epoch → open the
+        new WAL → replay the recorded tail through the ordinary write paths
+        (journaled into the new WAL, frame shipping suppressed — replicas
+        pull the re-journaled tail via catch-up, §8.4) → fsync → publish
+        the new-epoch snapshot → delete old WALs.  A crash before the
+        snapshot publish recovers from the old pair, whose WAL still holds
+        the trigger record and the full tail.
+        """
+        t = self._handoff_thread
+        if t is None:
+            return False
+        if not wait and t.is_alive():
+            return False
+        t.join()
+        self._handoff_thread = None
+        status = self._handoff_result[0] if self._handoff_result else None
+        self._handoff_result = None
+        ops, self._handoff_ops = (self._handoff_ops or []), None
+        if status is None or status[0] == "err":
+            err = status[1] if status else None
+            raise RuntimeError("background compaction failed") from err
+        _, fitted, relearned = status
+        bk = self.backend
+        self._install_fit(fitted)      # atomic swap: new epoch serves next
+        self.compactions += 1
+        self.backend = bk
+        self._last_compact_relearned = relearned
+        # Counter convergence with the synchronous world: a sync compaction
+        # at the trigger record leaves ``write_units`` at 0 and the tail
+        # ops then tick the ordinary check schedule.  Resetting here and
+        # replaying the tail WITH live counters lands the amortized-trigger
+        # phase exactly where a sync replica (§8.2 implicit rotation) or a
+        # crash replay (§7.3) lands it, so future trigger timing agrees.
+        self._write_units = 0
+        self._spill_pending = False
+
+        def _replay_tail():
+            self._in_handoff_replay = True
+            try:
+                for op in ops:
+                    if op[0] == "i":
+                        self.insert(op[1], ids=op[2])
+                    else:
+                        self.delete(op[1])
+            finally:
+                self._in_handoff_replay = False
+
+        if self.durable is not None:
+            self.durable.handoff_rotate(self, _replay_tail, relearned)
+        else:
+            _replay_tail()
+        self.background_compactions += 1
+        self.last_handoff_s = time.perf_counter() - self._handoff_t0
+        return True
+
+    def finish_handoff(self) -> bool:
+        """Block until any in-flight background build is installed —
+        called before checkpoints, seeds, synchronous ``compact()`` and at
+        ``QueryServer.close`` (the §8.1 graceful-shutdown join)."""
+        return self.poll_handoff(wait=True)
 
     def live_rows(self) -> Tuple[np.ndarray, np.ndarray]:
         """(rows, ids) of every live row: snapshot survivors + delta logs —
         the compaction feed, and the scratch-rebuild oracle's input."""
         dead = self._dead_ids()
         if dead.size:
-            keep = ~np.isin(self.row_ids, dead)
+            keep = ~sorted_contains(dead, self.row_ids)
             rows, ids = self.data[keep], self.row_ids[keep]
         else:
             rows, ids = self.data, self.row_ids
@@ -382,7 +667,10 @@ class COAXIndex:
         the epoch — which is what invalidates any frozen ``DevicePlan``:
         the rebuilt ``GridFile``s carry the new epoch and lazily build fresh
         plans on first device use (DESIGN.md §5 invalidation contract).
+        Any in-flight background build is folded in first, so explicit
+        compaction composes with the §5.4 handoff machinery.
         """
+        self.poll_handoff(wait=True)   # fold an in-flight handoff first
         if relearn is None:
             relearn = self.drift_predictability() < self.config.drift_threshold
         rows, ids = self.live_rows()
@@ -408,9 +696,12 @@ class COAXIndex:
                 "relearned": relearned}
 
     def _dead_ids(self) -> np.ndarray:
-        """Tombstoned ids across both planes (for masking snapshot hits)."""
-        return np.concatenate([self.delta_primary.dead_ids(),
+        """Tombstoned ids across both planes, SORTED (the hit-masking
+        paths binary-search this instead of ``isin``-sorting per wave)."""
+        dead = np.concatenate([self.delta_primary.dead_ids(),
                                self.delta_outlier.dead_ids()])
+        dead.sort()
+        return dead
 
     # ------------------------------------------------------------------ #
     # Durability (DESIGN.md §7): full-state capture, save/restore
@@ -443,6 +734,9 @@ class COAXIndex:
             "outlier_hi": self._outlier_hi,
             "delta_primary": self.delta_primary.state_dict(),
             "delta_outlier": self.delta_outlier.state_dict(),
+            "write_units": self._write_units,
+            "spill_pending": self._spill_pending,
+            "trigger_checks": self.trigger_checks,
             "tracker_xtx": (np.stack([self._fd_trackers[k].xtx for k in keys])
                             if keys else np.empty((0, 2, 2))),
             "tracker_xty": (np.stack([self._fd_trackers[k].xty for k in keys])
@@ -451,6 +745,10 @@ class COAXIndex:
                 [self._fd_trackers[k].lam for k in keys], np.float64),
             "x_scale": np.asarray(
                 [self._x_scale[gi] for gi in range(len(self.groups))], np.float64),
+            "viol_total": np.asarray(
+                [self._viol_total[gi] for gi in range(len(self.groups))], np.int64),
+            "viol_bad": np.asarray(
+                [self._viol_bad[gi] for gi in range(len(self.groups))], np.int64),
         }
 
     @classmethod
@@ -486,10 +784,16 @@ class COAXIndex:
         idx._outlier_hi = state["outlier_hi"]
         idx._base_primary_ids = np.sort(idx.primary.row_ids)
         idx._base_outlier_ids = np.sort(idx.outlier.row_ids)
-        idx.delta_primary = DeltaPlane.from_state(idx.n_dims,
-                                                  state["delta_primary"])
-        idx.delta_outlier = DeltaPlane.from_state(idx.n_dims,
-                                                  state["delta_outlier"])
+        kd = idx._delta_key_dim()
+        spill = idx.config.delta_l0_spill
+        idx.delta_primary = DeltaPlane.from_state(
+            idx.n_dims, state["delta_primary"], key_dim=kd, l0_spill=spill)
+        idx.delta_outlier = DeltaPlane.from_state(
+            idx.n_dims, state["delta_outlier"], key_dim=kd, l0_spill=spill)
+        idx._init_write_state()
+        idx._write_units = int(state.get("write_units", 0))
+        idx._spill_pending = bool(state.get("spill_pending", False))
+        idx.trigger_checks = int(state.get("trigger_checks", 0))
         keys = idx._tracker_keys()
         xtx, xty = state["tracker_xtx"], state["tracker_xty"]
         lam = state["tracker_lam"]
@@ -500,6 +804,14 @@ class COAXIndex:
             for i, k in enumerate(keys)
         }
         idx._x_scale = {gi: float(s) for gi, s in enumerate(state["x_scale"])}
+        n_groups = len(idx.groups)
+        vt = np.asarray(state.get("viol_total", ()), np.int64)
+        vb = np.asarray(state.get("viol_bad", ()), np.int64)
+        if vt.shape[0] != n_groups or vb.shape[0] != n_groups:
+            vt = np.zeros(n_groups, np.int64)   # pre-counter snapshot
+            vb = np.zeros(n_groups, np.int64)
+        idx._viol_total = {gi: int(vt[gi]) for gi in range(n_groups)}
+        idx._viol_bad = {gi: int(vb[gi]) for gi in range(n_groups)}
         idx.backend = backend
         return idx
 
@@ -549,6 +861,7 @@ class COAXIndex:
         return translate_rect(rect, self.groups, self.keep_dims)
 
     def query(self, rect: Rect) -> np.ndarray:
+        self._poll_entry()
         rect = np.asarray(rect, dtype=np.float64)
         nav = self.translate(rect)
         hits = [self.primary.query(nav, rect)]
@@ -561,7 +874,7 @@ class COAXIndex:
         out = np.concatenate(hits) if len(hits) > 1 else hits[0]
         dead = self._dead_ids()
         if dead.size and out.size:
-            out = out[~np.isin(out, dead)]
+            out = out[~sorted_contains(dead, out)]
         d1 = self.delta_primary.scan(rect)
         d2 = self.delta_outlier.scan(rect)
         if d1.size or d2.size:
@@ -589,6 +902,7 @@ class COAXIndex:
         candidate cells overflow ``cell_cap`` fall back to the host path.
         Either way the answer is bit-identical to the numpy backend.
         """
+        self._poll_entry()
         rects = np.asarray(rects, dtype=np.float64)
         b = rects.shape[0]
         if b == 0:
@@ -633,7 +947,7 @@ class COAXIndex:
 
         dead = self._dead_ids()
         if dead.size and r_p.size:
-            keep = ~np.isin(r_p, dead)
+            keep = ~sorted_contains(dead, r_p)
             q_p, r_p = q_p[keep], r_p[keep]
         q_d1, r_d1 = self.delta_primary.scan_batch(rects)
         q_d2, r_d2 = self.delta_outlier.scan_batch(rects)
@@ -642,7 +956,10 @@ class COAXIndex:
             r_p = np.concatenate([r_p, r_d1, r_d2])
             order = np.lexsort((r_p, q_p))
             q_p, r_p = q_p[order], r_p[order]
-        stats.rows_scanned += b * self.delta_rows      # exact per-query scans
+        # delta work actually done: run-window candidates + dense L0 rows
+        # (was b * delta_rows before the §5.3 tiered runs)
+        stats.rows_scanned += (self.delta_primary.last_scan_probed
+                               + self.delta_outlier.last_scan_probed)
         return q_p, r_p, stats
 
     # ------------------------------------------------------------------ #
@@ -668,10 +985,8 @@ class COAXIndex:
             self._device_plan_failed = True
             self._coax_plan = None
             return None
-        if plan is not None:       # carry transfer/dispatch counters across
-            fresh.dispatch_count += plan.dispatch_count      # epoch swaps
-            fresh.bytes_h2d += plan.bytes_h2d
-            fresh.bytes_d2h += plan.bytes_d2h
+        if plan is not None:       # carry counters AND the jit cache across
+            fresh.adopt(plan)      # epoch swaps (no recompile per epoch)
         self._coax_plan = fresh
         return fresh
 
@@ -682,7 +997,10 @@ class COAXIndex:
         then.  Waves the plan cannot serve (``cell_cap`` overflow, device
         unavailable) are answered synchronously here by the host path, so
         the handle ALWAYS reflects this submit's snapshot+delta state even
-        if writes land before collection (per-wave snapshot semantics)."""
+        if writes land before collection (per-wave snapshot semantics).
+        A finished background build is folded in HERE, before the wave's
+        snapshot is captured — wave-boundary handoff visibility (§5.4)."""
+        self._poll_entry()
         rects = np.asarray(rects, dtype=np.float64)
         if nav is None:
             nav = self.translate_batch(rects) if rects.shape[0] else None
@@ -771,6 +1089,14 @@ class COAXIndex:
             "outlier_cells": self.outlier.n_cells,
             "epoch": self.epoch,
             "compactions": self.compactions,
+            "trigger_checks": self.trigger_checks,
+            "write_units": self._write_units,
+            "background": {
+                "enabled": self.config.background_compact,
+                "in_flight": self._handoff_thread is not None,
+                "completed": self.background_compactions,
+                "last_handoff_s": self.last_handoff_s,
+            },
             "delta_primary": self.delta_primary.describe(),
             "delta_outlier": self.delta_outlier.describe(),
             "tombstones": self.tombstone_count,

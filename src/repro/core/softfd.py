@@ -129,18 +129,41 @@ class BayesianLinearModel:
         return cls(np.zeros((2, 2)), np.zeros(2), lam)
 
     def update(self, x: np.ndarray, y: np.ndarray, w: Optional[np.ndarray] = None) -> None:
+        # closed-form Gram sums: the design matrix is [x, 1], so the five
+        # moments below ARE Xw.T @ X and Xw.T @ y — no (n, 2) stack/matmul
+        # per call (this runs on every insert's drift-tracker update)
         x = np.asarray(x, dtype=np.float64)
         y = np.asarray(y, dtype=np.float64)
-        w = np.ones_like(x) if w is None else np.asarray(w, dtype=np.float64)
-        X = np.stack([x, np.ones_like(x)], axis=1)  # (n, 2): slope, intercept
-        Xw = X * w[:, None]
-        self.xtx += Xw.T @ X
-        self.xty += Xw.T @ y
+        if w is None:
+            sw, sx, sxx = float(x.size), float(x.sum()), float(x @ x)
+            sy, sxy = float(y.sum()), float(x @ y)
+        else:
+            w = np.asarray(w, dtype=np.float64)
+            wx = w * x
+            sw, sx, sxx = float(w.sum()), float(wx.sum()), float(wx @ x)
+            sy, sxy = float(w @ y), float(wx @ y)
+        self.xtx[0, 0] += sxx
+        self.xtx[0, 1] += sx
+        self.xtx[1, 0] += sx
+        self.xtx[1, 1] += sw
+        self.xty[0] += sxy
+        self.xty[1] += sy
 
     def posterior_mean(self) -> Tuple[float, float]:
-        A = self.xtx + self.lam * np.eye(2)
-        m, b = np.linalg.solve(A, self.xty)
-        return float(m), float(b)
+        # 2x2 ridge solve by Cramer's rule — ``np.linalg.solve`` costs ~40us
+        # of LAPACK dispatch per call, and ``drift_predictability`` evaluates
+        # every tracker on every amortized trigger check
+        a = self.xtx[0, 0] + self.lam
+        b = self.xtx[0, 1]
+        c = self.xtx[1, 0]
+        d = self.xtx[1, 1] + self.lam
+        det = a * d - b * c
+        if det == 0.0:
+            A = self.xtx + self.lam * np.eye(2)
+            m, b = np.linalg.solve(A, self.xty)
+            return float(m), float(b)
+        t0, t1 = self.xty[0], self.xty[1]
+        return float((d * t0 - b * t1) / det), float((a * t1 - c * t0) / det)
 
 
 def bayes_linear_regress(
@@ -320,6 +343,15 @@ def merge_groups(
     other member have the smallest total normalised width — i.e., the best
     single explainer.  Models predictor->dependent are then (re)fit on a data
     sample for each dependent.
+
+    Over-merge recovery: union-find is transitive, so a single weak bridge
+    pair (e.g. minted by a burst of FD-violating rows inflating a column's
+    range) can fuse two unrelated groups into one component that no single
+    predictor explains.  When that happens we keep the best sub-star and
+    requeue the unexplained members as their own component rather than
+    silently dropping them — so a ~1% contamination burst costs at most the
+    bridge pair, never a whole group's worth of eliminated dims
+    (DESIGN.md §5.2).
     """
     if not pairs:
         return []
@@ -341,9 +373,9 @@ def merge_groups(
     sample = np.asarray(data[take], dtype=np.float64)
 
     groups: List[FDGroup] = []
-    for mem in members.values():
-        if len(mem) < 2:
-            continue
+    work: List[List[int]] = [mem for mem in members.values() if len(mem) >= 2]
+    while work:
+        mem = work.pop(0)
         # Score each candidate predictor by the total width of its models.
         best_pred, best_cost, best_models = -1, np.inf, None
         for pred in mem:
@@ -363,22 +395,33 @@ def merge_groups(
             if ok and cost < best_cost:
                 best_pred, best_cost, best_models = pred, cost, models
         if best_models is None:
-            # Fall back: largest sub-star that does fit (drop unexplainable deps).
+            # No single predictor covers the whole component: the union-find
+            # over-merged on a weak bridge pair.  Keep the best sub-star
+            # (largest; total width breaks ties) and requeue the unexplained
+            # members so their own group survives the bridge.
             star: Dict[int, Dict[int, LinearModel]] = {}
+            star_cost: Dict[int, float] = {}
             for pred in mem:
                 models = {}
+                cost = 0.0
                 for dep in mem:
                     if dep == pred:
                         continue
                     out = fit_pair(sample[:, pred], sample[:, dep], cfg, rng)
                     if out is not None:
                         models[dep] = out[0]
+                        cost += out[1]
                 if models:
                     star[pred] = models
+                    star_cost[pred] = cost
             if not star:
                 continue
-            best_pred = max(star, key=lambda p: len(star[p]))
+            best_pred = max(star, key=lambda p: (len(star[p]), -star_cost[p]))
             best_models = star[best_pred]
+            leftover = [a for a in mem
+                        if a != best_pred and a not in best_models]
+            if len(leftover) >= 2:
+                work.append(leftover)
         groups.append(
             FDGroup(
                 predictor=best_pred,

@@ -28,6 +28,7 @@ __all__ = [
     "full_rect",
     "point_rect",
     "rect_contains",
+    "sorted_contains",
     "split_hits",
     "validate_rect",
 ]
@@ -112,6 +113,22 @@ def rect_contains(rect: Rect, data: np.ndarray) -> np.ndarray:
     """Boolean mask of rows of ``data`` inside ``rect`` (half-open per dim)."""
     lo, hi = rect[:, 0], rect[:, 1]
     return np.all((data >= lo) & (data < hi), axis=-1)
+
+
+def sorted_contains(haystack: np.ndarray, values: np.ndarray) -> np.ndarray:
+    """Membership mask of ``values`` in a SORTED ``haystack``.
+
+    ``np.isin`` re-sorts the larger operand on every call — O(n log n) per
+    lookup against a 50k-id base array; binary search against the already-
+    sorted array is O(m log n), the difference between the write path
+    scaling with the base size or not (DESIGN.md §5.1).
+    """
+    values = np.asarray(values)
+    if haystack.size == 0 or values.size == 0:
+        return np.zeros(values.shape, dtype=bool)
+    pos = np.searchsorted(haystack, values)
+    pos[pos == haystack.size] = haystack.size - 1
+    return haystack[pos] == values
 
 
 def split_hits(qids: np.ndarray, row_ids: np.ndarray,

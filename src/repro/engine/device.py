@@ -48,10 +48,12 @@ Overflow contracts (both exact):
     interleaved writes between submit and drain cannot shift the wave's
     snapshot (``hit_overflows`` stat).
 
-Shape bucketing: wave width pads to a pow2 bucket (min ``min_bucket``) and
-the delta image to ``max(128, pow2)`` rows, so steady-state serving
-re-enters compiled executables — ``compile_count`` exposes the jit cache
-size for the regression test.
+Shape bucketing: wave width pads to a pow2 bucket (min ``min_bucket``),
+grid images to a pow2 row count (min ``tile``), and the delta image to
+``max(128, pow2)`` rows, so steady-state serving — and epoch swaps under
+background compaction (§5.4), via ``_PlanBase.adopt`` — re-enter compiled
+executables; ``compile_count`` exposes the jit cache size for the
+regression test.
 
 Epoch versioning (DESIGN.md §5): images freeze ONE snapshot epoch;
 compaction swaps the grids, which invalidates the plan by identity
@@ -66,6 +68,7 @@ from typing import Optional, Tuple
 import numpy as np
 
 from ..core.gridfile import BatchStats, f32_ceil
+from ..core.types import sorted_contains
 
 __all__ = ["DevicePlan", "CoaxDevicePlan", "device_available", "f32_floor"]
 
@@ -179,10 +182,15 @@ class _GridImage:
         # mixed-radix weights of the row-major cell id, for window bounds
         self._radix = c ** (k - 1 - np.arange(k, dtype=np.int64))
 
-        # always >= 1 pad row: the gather-list fast path points pad slots at
-        # the last (dead, +inf) padded row, which must exist
-        pad = (-n) % self.tile or self.tile
-        self.n_pad = n + pad
+        # pow2 bucket (min tile, kept a tile multiple for the kernel grid)
+        # with always >= 1 pad row: the gather-list fast path points pad
+        # slots at the last (dead, +inf) padded row, which must exist.
+        # Bucketing means epoch-over-epoch growth re-enters compiled wave
+        # shapes instead of minting one executable per compaction (§5.4).
+        n_pad = max(self.tile, _next_pow2(n + 1))
+        n_pad += (-n_pad) % self.tile
+        self.n_pad = n_pad
+        pad = n_pad - n
         rows_t = np.pad(grid.rows.T, ((0, 0), (0, pad)),
                         constant_values=np.inf)
         self.rows_t = jnp.asarray(rows_t, jnp.float32)
@@ -209,7 +217,9 @@ class _GridImage:
         if dead_ids is None or not dead_ids.size:
             alive[0, :self.n] = 1
         else:
-            alive[0, :self.n] = ~np.isin(self.grid.row_ids, dead_ids)
+            # dead_ids is sorted (``COAXIndex._dead_ids``): binary-search
+            # membership, no per-upload re-sort of the 50k-id base
+            alive[0, :self.n] = ~sorted_contains(dead_ids, self.grid.row_ids)
         self.alive = jnp.asarray(alive)
         return alive.size * 4
 
@@ -361,6 +371,18 @@ class _PlanBase:
         self.dispatch_count = 0      # jitted wave-program launches (1/wave)
         self.bytes_h2d = 0           # resident images + per-wave inputs
         self.bytes_d2h = 0           # drained compacted result buffers
+
+    def adopt(self, other: "_PlanBase") -> None:
+        """Carry the previous epoch's jit cache and cumulative counters into
+        this fresh plan.  Epoch handoff (§5.4) swaps the grids and rebuilds
+        the plan; with pow2-bucketed image shapes the new epoch's waves hit
+        the SAME compiled executables, so adopting ``_fn`` keeps
+        ``compile_count`` flat across compactions and the launch/transfer
+        accounting monotonic."""
+        self._fn = other._fn
+        self.dispatch_count = other.dispatch_count
+        self.bytes_h2d += other.bytes_h2d
+        self.bytes_d2h = other.bytes_d2h
 
     @property
     def compile_count(self) -> int:
@@ -750,7 +772,7 @@ class CoaxDevicePlan(_PlanBase):
                 r_p = np.concatenate([r_p, r_o])
         dead = ticket["dead"]
         if dead.size and r_p.size:
-            keep = ~np.isin(r_p, dead)
+            keep = ~sorted_contains(dead, r_p)
             q_p, r_p = q_p[keep], r_p[keep]
         if ticket["delta"] is not None:
             drows, dids = ticket["delta"]

@@ -130,7 +130,12 @@ class BatchQueryExecutor:
         """Re-assert the requested backend on the index before a wave: if
         anything reset it (compaction path, another executor sharing the
         index), the wave would otherwise silently serve from the wrong
-        plane."""
+        plane.  Also the wave-boundary handoff point (DESIGN.md §5.4): a
+        finished background compaction installs here, BEFORE the wave
+        captures its snapshot, so every wave serves one whole epoch."""
+        poll = getattr(self.index, "poll_handoff", None)
+        if poll is not None:
+            poll()
         if self._requested_backend is None:
             return
         cur = getattr(self.index, "backend", None)

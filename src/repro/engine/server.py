@@ -162,19 +162,36 @@ class QueryServer:
 
     def flush_writes(self) -> Dict[int, object]:
         """Apply every queued write in admission order; returns the results
-        of the writes applied by THIS call ({write_id: ids | count})."""
+        of the writes applied by THIS call ({write_id: ids | count}).
+
+        Adjacent queued inserts are COALESCED into one index call: row ids
+        are assigned in admission order either way, so the final state is
+        identical, and the per-op fixed cost (margin checks, tracker
+        update, trigger check, WAL record) is paid once per run of inserts
+        instead of once per admission."""
         applied: Dict[int, object] = {}
         index = self.executor.index
-        while self._write_queue:
-            wid, kind, payload = self._write_queue.pop(0)
-            if kind == "insert":
-                res = index.insert(payload)
-                self.rows_inserted += int(np.asarray(res).size)
+        q = self._write_queue
+        while q:
+            if q[0][1] == "insert":
+                run = []
+                while q and q[0][1] == "insert":
+                    run.append(q.pop(0))
+                rows = (run[0][2] if len(run) == 1 else
+                        np.concatenate([p for _, _, p in run], axis=0))
+                ids = index.insert(rows)
+                self.rows_inserted += int(np.asarray(ids).size)
+                off = 0
+                for wid, _, p in run:
+                    applied[wid] = ids[off:off + p.shape[0]]
+                    off += p.shape[0]
+                self.writes_applied += len(run)
             else:
+                wid, _, payload = q.pop(0)
                 res = index.delete(payload)
                 self.rows_deleted += int(res)
-            applied[wid] = res
-            self.writes_applied += 1
+                applied[wid] = res
+                self.writes_applied += 1
         self.write_results.update(applied)
         return applied
 
@@ -258,10 +275,16 @@ class QueryServer:
         return self.shutdown is not None and self.shutdown.requested
 
     def close(self) -> None:
-        """Orderly exit: apply every queued write, fsync the journal tail,
-        release the WAL handle.  Idempotent (the durability plane's close
-        is), so signal handlers and ``finally`` blocks can both call it."""
+        """Orderly exit: apply every queued write, JOIN any in-flight
+        background compaction (installing its epoch — the §5.4 graceful-
+        shutdown contract: the compactor's work is never abandoned), fsync
+        the journal tail, release the WAL handle.  Idempotent (the
+        durability plane's close is), so signal handlers and ``finally``
+        blocks can both call it."""
         self.flush_writes()
+        fh = getattr(self.executor.index, "finish_handoff", None)
+        if fh is not None:
+            fh()
         dur = getattr(self.executor.index, "durable", None)
         if dur is not None:
             dur.sync()

@@ -286,6 +286,28 @@ class ShardedCOAX:
     def compactions(self) -> int:
         return sum(s.compactions for s in self.shards)
 
+    @property
+    def trigger_checks(self) -> int:
+        return sum(s.trigger_checks for s in self.shards)
+
+    @property
+    def background_compactions(self) -> int:
+        return sum(s.background_compactions for s in self.shards)
+
+    def poll_handoff(self, wait: bool = False) -> bool:
+        """Fan the §5.4 epoch-handoff poll across shards (each shard's
+        background compactor runs independently); True iff any shard
+        installed a finished build."""
+        installed = False
+        for s in self.shards:
+            installed |= s.poll_handoff(wait=wait)
+        return installed
+
+    def finish_handoff(self) -> bool:
+        """Join every shard's in-flight background compaction — the
+        graceful-shutdown barrier, fanned out."""
+        return self.poll_handoff(wait=True)
+
     # ------------------------------------------------------------------ #
     # Write path: route per shard, ids from one global sequence
     # ------------------------------------------------------------------ #
@@ -433,6 +455,16 @@ class ShardedCOAX:
             "compactions": self.compactions,
             "delta_rows": self.delta_rows,
             "tombstones": self.tombstone_count,
+            "trigger_checks": self.trigger_checks,
+            "background": {
+                "enabled": bool(self.config.background_compact)
+                if self.config is not None else False,
+                "in_flight": sum(s._handoff_thread is not None
+                                 for s in self.shards),
+                "completed": self.background_compactions,
+            },
+            "delta_runs": [s.delta_primary.n_runs + s.delta_outlier.n_runs
+                           for s in self.shards],
             "shard_epochs": [s.epoch for s in self.shards],
             "shard_groups": [[(g.predictor, list(g.dependents))
                               for g in s.groups] for s in self.shards],

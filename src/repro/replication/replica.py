@@ -118,10 +118,26 @@ class Replica:
         state, (epoch, seq), writes, nbytes = self.hub.seed()
         self.index = COAXIndex._restore_state(state, backend=self.backend,
                                               device_opts=self.device_opts)
+        self._force_sync_compaction()
         self.epoch, self.next_seq = epoch, seq
         self.position, self.position_bytes = writes, nbytes
         self._future.clear()
         self.last_heartbeat = (time.time(), time.time(), (epoch, seq))
+
+    def _force_sync_compaction(self) -> None:
+        """Replicas always compact SYNCHRONOUSLY, whatever the seeded
+        config says: the §8.2 implicit-rotation contract needs the epoch
+        to advance AT the trigger record (so the frontier resets exactly
+        where the primary's freeze happened), which a §5.4 background
+        build — installing at some later poll — would break.  A background
+        primary's handoff converges to the same state (same frozen row
+        set, tail re-journaled into the new epoch's WAL and pulled here
+        via catch-up), so sync apply stays bit-identical."""
+        import dataclasses
+        cfg = self.index.config
+        if cfg.background_compact:
+            self.index.config = dataclasses.replace(
+                cfg, background_compact=False)
 
     # ------------------------------------------------------------------ #
     @property
@@ -315,6 +331,7 @@ class Replica:
         from ..storage import restore
         self.index = restore(directory, backend=self.backend,
                              device_opts=self.device_opts, durable=False)
+        self._force_sync_compaction()
         _, next_seq, _ = read_wal(wal_path(directory, self.index.epoch),
                                   expect_epoch=self.index.epoch)
         self.epoch, self.next_seq = self.index.epoch, next_seq

@@ -8,7 +8,12 @@ replication hooks and turns the primary's journal into a shipped stream:
 * every §7.5 compaction-rotation ships as an ``F_ROTATE`` control frame
   from INSIDE the rotation window (``rotate_observer``) — after the new
   epoch pair is on disk, before old WALs die — so a crash injected there
-  models a primary dying mid-rotation with replicas mid-stream;
+  models a primary dying mid-rotation with replicas mid-stream.  A §5.4
+  background-compaction handoff fires the SAME observer
+  (``Durability.handoff_rotate``); its re-journaled tail records are NOT
+  pushed (``_suppress_ship``) — a sync replica already rotated implicitly
+  at the trigger record, drops the old-epoch tail pushes as duplicates,
+  and pulls the re-journaled tail via ``fetch(new_epoch, 0)``;
 * ``heartbeat()`` ships the journal frontier + wall time, the liveness
   signal replicas date their health from.
 
@@ -53,7 +58,17 @@ def seed_state(index) -> dict:
     index's arrays, and a replica restored from it would mutate its
     primary.  The codec path is the §7.3 bit-identity contract made into
     a copier — exactly what shipping a snapshot over a wire would do.
+
+    Any in-flight §5.4 background build is JOINED first: a seed taken
+    mid-build would hand the replica the old epoch plus a delta the
+    primary is about to fold into a NEW epoch built from an earlier
+    freeze — the replica's own (synchronous) trigger would then fire over
+    a different row set and diverge.  Post-join, the seed is an ordinary
+    whole-epoch state.
     """
+    fh = getattr(index, "finish_handoff", None)
+    if fh is not None:
+        fh()
     manifest, arrays = pack_state(index._snapshot_state())
     buf = io.BytesIO()
     np.savez(buf, **arrays)

@@ -9,6 +9,12 @@
   the epoch and emptied the delta planes, so the plane publishes a fresh
   epoch snapshot (atomic, §7.1), opens the new epoch's WAL and only then
   deletes older WAL files — every crash window leaves a recoverable pair;
+* ``handoff_rotate`` is the same truncation point for a BACKGROUND
+  compaction (epoch handoff, DESIGN.md §5.4): the writes admitted during
+  the build are re-journaled into the new epoch's WAL and fsynced BEFORE
+  the new snapshot is published, so a crash in any window recovers either
+  from the old pair (whose WAL still holds the trigger record + tail —
+  replay re-fires the compaction deterministically) or from the new pair;
 * ``checkpoint`` publishes a mid-epoch full-state snapshot stamped with the
   journal position (``wal_seq``), bounding replay cost without touching the
   WAL file;
@@ -74,6 +80,9 @@ class Durability:
         self.wal: Optional[WriteAheadLog] = None
         self._suppress_append = False    # True only while replaying (§7.4)
         self._replaying = False          # defers rotation disk work (§7.5)
+        self._suppress_ship = False      # True while re-journaling the §5.4
+                                         # handoff tail (replicas pull it
+                                         # via catch-up fetch instead, §8.4)
         self.last_snapshot_path: Optional[Path] = None
         self.last_snapshot_wal_seq = 0
         self.last_snapshot_bytes = 0
@@ -97,7 +106,8 @@ class Durability:
 
     def _frame_appended(self, epoch: int, seq: int, kind: int,
                         payload: bytes) -> None:
-        if self.frame_observer is not None and not self._replaying:
+        if (self.frame_observer is not None and not self._replaying
+                and not self._suppress_ship):
             self.frame_observer(epoch, seq, kind, payload)
 
     # ------------------------------------------------------------------ #
@@ -196,6 +206,57 @@ class Durability:
             if p != self.wal.path:
                 p.unlink(missing_ok=True)
 
+    def handoff_rotate(self, index: COAXIndex, replay_tail,
+                       relearned: bool) -> None:
+        """Rotate at a BACKGROUND-compaction handoff (DESIGN.md §5.4): the
+        index has already installed the built epoch (empty deltas), but the
+        writes admitted during the build still live only in the OLD WAL.
+        Ordering is the crash contract:
+
+        1. open the new epoch's WAL (unlinking torn leftovers of a crashed
+           prior handoff);
+        2. run ``replay_tail`` — the index re-applies the recorded tail
+           through its ordinary write paths, which journals each op into
+           the new WAL.  Frame shipping is suppressed for these records: a
+           replica rotates at the trigger record it replayed itself and
+           pulls the re-journaled tail via catch-up ``fetch`` (§8.4), so
+           ``total_writes`` never double-counts the tail;
+        3. fsync the new WAL, THEN publish the new epoch snapshot stamped
+           past the tail — from here recovery prefers the new pair;
+        4. only then delete older WAL files.
+
+        A crash before (3)'s snapshot lands recovers from the old pair:
+        its WAL still holds the trigger record and the full tail, replay
+        re-fires this compaction deterministically (sync, §7.3) and
+        ``finish_replay`` unlinks the partial new WAL.  Mid-replay
+        handoffs cannot happen (replay forces synchronous compaction)."""
+        if self._replaying:            # defensive: replay is sync-only
+            return
+        old = self.wal
+        fresh = wal_path(self.directory, index.epoch)
+        fresh.unlink(missing_ok=True)  # torn leftovers of a crashed handoff
+        self.wal = self._open_wal(fresh, index.epoch, start_seq=0)
+        self._suppress_ship = True
+        try:
+            replay_tail()
+        finally:
+            self._suppress_ship = False
+        self.wal.sync()
+        if old is not None:
+            old.close()
+        self._record_snapshot(
+            write_snapshot(index, self.directory,
+                           wal_seq=self.wal.next_seq, keep=self.keep),
+            self.wal.next_seq)
+        if self.rotate_observer is not None:
+            # same mid-rotation ship point as ``on_compact`` (§8.2)
+            self.rotate_observer(old.epoch if old is not None else index.epoch - 1,
+                                 old.next_seq if old is not None else 0,
+                                 index.epoch, bool(relearned))
+        for p in _wal_files(self.directory):
+            if p != self.wal.path:
+                p.unlink(missing_ok=True)
+
     def finish_replay(self, tail_records) -> None:
         """Deferred rotation after a replay that crossed >=1 compaction
         (§7.5): the replayed WAL stayed untouched throughout, so every
@@ -238,7 +299,16 @@ class Durability:
         instead of the epoch's beginning.  The WAL file itself is never cut
         mid-epoch (truncation happens only at rotation, §7.5).  ``keep``
         overrides the attach-time retention for this one call (the
-        ``save(directory, keep=...)`` path)."""
+        ``save(directory, keep=...)`` path).
+
+        An in-flight §5.4 background build is folded in first: a snapshot
+        taken mid-build would otherwise become a restore base from which
+        the build's deterministic re-fire diverges (the freeze set is
+        already fixed, but the checkpoint would split the tail across the
+        rotation boundary)."""
+        fh = getattr(self.index, "finish_handoff", None)
+        if fh is not None:
+            fh()
         self.sync()
         seq = self.wal.next_seq
         if (keep is None and self.last_snapshot_path is not None
@@ -315,17 +385,28 @@ def _replay(index: COAXIndex, directory: Path, durable: bool,
     applied = []
     tail_start = 0
     epoch_before = cur_epoch = index.epoch
-    for rec in records:
-        if rec.seq < start_seq:
-            continue                      # already folded into the snapshot
-        if rec.kind == OP_INSERT:
-            index.insert(rec.rows, ids=rec.ids)
-        else:
-            index.delete(rec.ids)
-        applied.append(rec)
-        if index.epoch != cur_epoch:      # a replayed op re-fired compaction
-            cur_epoch = index.epoch
-            tail_start = len(applied)     # later ops belong to the new WAL
+    # replay is sync-only (§7.3): a replayed op that trips the compaction
+    # trigger must compact HERE, not kick off a §5.4 background build —
+    # also covers durable=False (read-only) loads, where no plane's
+    # ``_replaying`` flag exists to force it
+    sync_flag = hasattr(index, "_in_handoff_replay")
+    if sync_flag:
+        index._in_handoff_replay = True
+    try:
+        for rec in records:
+            if rec.seq < start_seq:
+                continue                  # already folded into the snapshot
+            if rec.kind == OP_INSERT:
+                index.insert(rec.rows, ids=rec.ids)
+            else:
+                index.delete(rec.ids)
+            applied.append(rec)
+            if index.epoch != cur_epoch:  # a replayed op re-fired compaction
+                cur_epoch = index.epoch
+                tail_start = len(applied)  # later ops belong to the new WAL
+    finally:
+        if sync_flag:
+            index._in_handoff_replay = False
     if dur is not None:
         dur._replaying = False
         dur._suppress_append = False

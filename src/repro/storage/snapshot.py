@@ -125,10 +125,20 @@ def pack_state(state: dict) -> Tuple[dict, dict]:
         "outlier_meta": _grid_meta(state["outlier"]["meta"]),
         "delta": {
             "primary": {"n_log_dead": int(state["delta_primary"]["n_log_dead"]),
-                        "n_base_dead": int(state["delta_primary"]["n_base_dead"])},
+                        "n_base_dead": int(state["delta_primary"]["n_base_dead"]),
+                        "organized": int(state["delta_primary"].get("organized", 0))},
             "outlier": {"n_log_dead": int(state["delta_outlier"]["n_log_dead"]),
-                        "n_base_dead": int(state["delta_outlier"]["n_base_dead"])},
+                        "n_base_dead": int(state["delta_outlier"]["n_base_dead"]),
+                        "organized": int(state["delta_outlier"].get("organized", 0))},
         },
+        # amortized-trigger counters (DESIGN.md §5.3): check timing is part
+        # of the §7.3 bit-identity contract, so it must survive restore
+        "write_units": int(state.get("write_units", 0)),
+        "spill_pending": bool(state.get("spill_pending", False)),
+        "trigger_checks": int(state.get("trigger_checks", 0)),
+        # violation-mass counters: the contamination side of the drift gate
+        "viol_total": [int(v) for v in state.get("viol_total", [])],
+        "viol_bad": [int(v) for v in state.get("viol_bad", [])],
     }
     return manifest, arrays
 
@@ -166,7 +176,9 @@ def unpack_state(manifest: dict, arrays: dict) -> dict:
                 "ids": arrays[f"{prefix}__ids"],
                 "dead": arrays[f"{prefix}__dead"],
                 "n_log_dead": counters["n_log_dead"],
-                "n_base_dead": counters["n_base_dead"]}
+                "n_base_dead": counters["n_base_dead"],
+                # pre-LSM snapshots: fully-unorganized log (L0 only)
+                "organized": counters.get("organized", 0)}
 
     has_bbox = manifest["has_outlier_bbox"]
     return {
@@ -188,6 +200,11 @@ def unpack_state(manifest: dict, arrays: dict) -> dict:
         "tracker_xty": arrays["tracker_xty"],
         "tracker_lam": arrays["tracker_lam"],
         "x_scale": arrays["x_scale"],
+        "write_units": manifest.get("write_units", 0),
+        "spill_pending": manifest.get("spill_pending", False),
+        "trigger_checks": manifest.get("trigger_checks", 0),
+        "viol_total": np.asarray(manifest.get("viol_total", []), np.int64),
+        "viol_bad": np.asarray(manifest.get("viol_bad", []), np.int64),
     }
 
 
