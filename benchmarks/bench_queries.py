@@ -22,6 +22,11 @@ into the ``sharded`` section of ``BENCH_queries.json``.
 ``--recover`` drives the durability plane (DESIGN.md §7): snapshot size
 and save latency, then recovery time as a function of WAL length (the
 replay tail), emitted to ``BENCH_storage.json``.
+``--cache`` drives the semantic result cache (DESIGN.md §9): a Zipfian
+hot-rect sweep (cached vs uncached QPS, bit-identity gated) plus the
+pinned-epoch MVCC drill, emitted to the ``cache`` section of
+``BENCH_queries.json``.  Every mode owns ONE top-level section of its
+BENCH file and merge-preserves the others.
 ``--smoke`` shrinks the sweep and turns the throughput/agreement checks
 into hard assertions for CI — for ``--mixed`` the gate is hit agreement
 between the mutated index and a rebuild-from-scratch oracle, for
@@ -52,12 +57,31 @@ SWEEPS = {
 
 
 def _read_bench_json(path: Path) -> dict:
-    """Existing benchmark doc at ``path``, or {} (missing/corrupt) — so the
-    --batch and --shards modes can each preserve the other's sections."""
+    """Existing benchmark doc at ``path``, or {} (missing/corrupt) — so
+    every mode can preserve the other modes' sections."""
     try:
         return json.loads(path.read_text())
     except (OSError, ValueError):
         return {}
+
+
+def _write_bench_section(out_path, default_name: str, section: str,
+                         result: dict) -> Path:
+    """Merge ``result`` under the ``section`` key of a shared BENCH file,
+    preserving EVERY foreign top-level key.
+
+    All writers of a shared file go through here: each mode owns exactly
+    one top-level section and never sees the others.  (run_batch used to
+    hand-preserve only "sharded" and run_mixed overwrote BENCH_updates.json
+    wholesale, so any other section — including the cache sweep — was
+    silently clobbered by a re-run of a sibling mode.)
+    """
+    out = Path(out_path) if out_path else \
+        Path(__file__).resolve().parents[1] / default_name
+    merged = _read_bench_json(out)
+    merged[section] = result
+    out.write_text(json.dumps(merged, indent=2) + "\n")
+    return out
 
 
 def _build(name, data, knob):
@@ -231,12 +255,7 @@ def run_batch(rows: int = 100_000, n_queries: int = 256,
              f"batch>=single ok, hit counts agree ({counts.pop()}), "
              f"one dispatch per device wave")
 
-    out = Path(out_path) if out_path else \
-        Path(__file__).resolve().parents[1] / "BENCH_queries.json"
-    prev = _read_bench_json(out)          # keep the --shards section alive
-    if "sharded" in prev:
-        result["sharded"] = prev["sharded"]
-    out.write_text(json.dumps(result, indent=2) + "\n")
+    _write_bench_section(out_path, "BENCH_queries.json", "batch", result)
     print(f"BENCH {json.dumps(result)}")
     return result
 
@@ -311,11 +330,7 @@ def run_sharded(rows: int = 100_000, n_queries: int = 256,
              f"hit agreement ok across K={list(shard_counts)} "
              f"({len(rects)} rects)")
 
-    out = Path(out_path) if out_path else \
-        Path(__file__).resolve().parents[1] / "BENCH_queries.json"
-    merged = _read_bench_json(out)
-    merged["sharded"] = result
-    out.write_text(json.dumps(merged, indent=2) + "\n")
+    _write_bench_section(out_path, "BENCH_queries.json", "sharded", result)
     print(f"BENCH {json.dumps(result)}")
     return result
 
@@ -447,9 +462,7 @@ def run_mixed(rows: int = 50_000, n_queries: int = 192,
             emit(f"mixed/airline/smoke@r{ratio}", 1.0,
                  f"oracle agreement ok ({len(rects)} rects)")
 
-    out = Path(out_path) if out_path else \
-        Path(__file__).resolve().parents[1] / "BENCH_updates.json"
-    out.write_text(json.dumps(result, indent=2) + "\n")
+    _write_bench_section(out_path, "BENCH_updates.json", "mixed", result)
     print(f"BENCH {json.dumps(result)}")
     return result
 
@@ -541,11 +554,7 @@ def run_recover(rows: int = 100_000, n_queries: int = 128,
     finally:
         shutil.rmtree(workdir, ignore_errors=True)
 
-    out = Path(out_path) if out_path else \
-        Path(__file__).resolve().parents[1] / "BENCH_storage.json"
-    merged = _read_bench_json(out)
-    merged["recover"] = result
-    out.write_text(json.dumps(merged, indent=2) + "\n")
+    _write_bench_section(out_path, "BENCH_storage.json", "recover", result)
     print(f"BENCH {json.dumps(result)}")
     return result
 
@@ -709,11 +718,114 @@ def run_failover(rows: int = 50_000, n_queries: int = 96, n_ops: int = 48,
     finally:
         shutil.rmtree(workdir, ignore_errors=True)
 
-    out = Path(out_path) if out_path else \
-        Path(__file__).resolve().parents[1] / "BENCH_storage.json"
-    merged = _read_bench_json(out)
-    merged["failover"] = result
-    out.write_text(json.dumps(merged, indent=2) + "\n")
+    _write_bench_section(out_path, "BENCH_storage.json", "failover", result)
+    print(f"BENCH {json.dumps(result)}")
+    return result
+
+
+def run_cache(rows: int = 100_000, n_queries: int = 512, n_hot: int = 16,
+              batch: int = 64, cache_mb: int = 64, out_path: str = None,
+              smoke: bool = False) -> dict:
+    """Semantic-cache mode (DESIGN.md §9): the Zipfian cache sweep.
+
+    A ``zipf_rects`` hot-rect stream (repeats = exact hits, nested subsets
+    = containment partials, per the "Benchmarking Learned Indexes" advice
+    to gate on a skewed mix rather than uniform rects) is answered three
+    ways on one airline index: uncached (the baseline + bit-identity
+    oracle), a cold cached pass (admissions + partials), and a warm cached
+    pass (the steady state the QPS claim is about).  Then the §9.3 MVCC
+    drill: a pinned reader on a background-compacting index must answer
+    bit-identically to pin time across a real epoch handoff, and the old
+    epoch must stay alive until release.
+
+    ``smoke`` turns the gates into hard assertions for CI: cache-on ≡
+    cache-off flat hits, ``cache_hit_rate > 0``, and pinned-reader
+    agreement.  Results land in the ``cache`` section of
+    ``BENCH_queries.json``; other sections are merge-preserved.
+    """
+    import sys
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "tests"))
+    from workloads import zipf_rects
+
+    ds = dataset("airline", rows)
+    rects = zipf_rects(ds.data, n=n_queries, n_hot=n_hot, seed=PCFG.seed,
+                       sample_cap=min(rows, 100_000))
+    idx = COAXIndex(ds.data)
+
+    ex0 = BatchQueryExecutor(idx, max_batch=batch)
+    want = ex0.execute(rects)                    # warm pass
+    ex0.reset_stats()
+    t0 = time.perf_counter()
+    ex0.execute(rects)
+    uncached_qps = len(rects) / (time.perf_counter() - t0)
+    emit("cache/airline/uncached_qps", uncached_qps,
+         f"rows={rows},queries={len(rects)},n_hot={n_hot},batch={batch}")
+
+    idx.attach_cache(byte_budget=cache_mb << 20)
+    ex = BatchQueryExecutor(idx, max_batch=batch)
+    cold = ex.execute(rects)                     # populates + partial hits
+    assert all(np.array_equal(g, w) for g, w in zip(cold, want)), \
+        "cold cached pass disagrees with the uncached oracle"
+    cold_stats = ex.stats()
+    ex.reset_stats()
+    t0 = time.perf_counter()
+    warm = ex.execute(rects)
+    cached_qps = len(rects) / (time.perf_counter() - t0)
+    assert all(np.array_equal(g, w) for g, w in zip(warm, want)), \
+        "warm cached pass disagrees with the uncached oracle"
+    s = ex.stats()
+    result = {
+        "dataset": "airline", "rows": rows, "n_queries": len(rects),
+        "n_hot": n_hot, "batch": batch, "cache_mb": cache_mb,
+        "uncached_qps": uncached_qps, "cached_qps": cached_qps,
+        "cache_speedup": cached_qps / uncached_qps,
+        "cold_hit_rate": cold_stats["cache_hit_rate"],
+        "warm_hit_rate": s["cache_hit_rate"],
+        "cache_bytes": s["cache_bytes"],
+        "cache": idx.cache.describe(),
+    }
+    emit("cache/airline/cached_qps", cached_qps,
+         f"speedup={result['cache_speedup']:.2f}x,"
+         f"warm_hit_rate={s['cache_hit_rate']:.3f},"
+         f"cache_bytes={s['cache_bytes']}")
+
+    # ---------------- §9.3 MVCC drill: pin across a real handoff -------- #
+    mvcc_rows = min(rows, 20_000)
+    bg = COAXIndex(ds.data[:mvcc_rows],
+                   CoaxConfig(background_compact=True, compact_min_delta=512,
+                              compact_delta_frac=0.01, compact_check_rows=32))
+    mvcc_rects = rects[:min(64, len(rects))]
+    pin = bg.pin_epoch()
+    pinned_want = pin.query_batch_split(mvcc_rects)
+    rng = np.random.default_rng(PCFG.seed)
+    t0 = time.perf_counter()
+    while bg.background_compactions < 1:
+        bg.insert(ds.data[rng.integers(0, mvcc_rows, 128)])
+        bg.poll_handoff(wait=True)
+    bg.finish_handoff()
+    handoff_s = time.perf_counter() - t0
+    pinned_got = pin.query_batch_split(mvcc_rects)
+    mvcc_ok = all(np.array_equal(g, w)
+                  for g, w in zip(pinned_got, pinned_want))
+    assert mvcc_ok, "pinned reader diverged across the background handoff"
+    assert bg.epoch > pin.epoch
+    pin.release()
+    result["mvcc"] = {
+        "pinned_agreement": mvcc_ok, "pinned_epoch": pin.epoch,
+        "live_epoch": bg.epoch, "handoffs": bg.background_compactions,
+        "handoff_drive_s": handoff_s,
+    }
+    emit("cache/airline/mvcc_pin", 1.0,
+         f"pinned@{pin.epoch} bit-identical across handoff to "
+         f"epoch {bg.epoch} ({len(mvcc_rects)} rects)")
+
+    if smoke:
+        assert s["cache_hit_rate"] > 0, "warm pass produced no cache hits"
+        emit("cache/airline/smoke", 1.0,
+             f"cache-on == cache-off ({len(rects)} rects), "
+             f"warm_hit_rate={s['cache_hit_rate']:.3f}, mvcc pin ok")
+
+    _write_bench_section(out_path, "BENCH_queries.json", "cache", result)
     print(f"BENCH {json.dumps(result)}")
     return result
 
@@ -733,6 +845,9 @@ if __name__ == "__main__":
     ap.add_argument("--failover", action="store_true",
                     help="replication mode: WAL shipping under faults, "
                          "promotion drills + BENCH_storage.json (DESIGN.md §8)")
+    ap.add_argument("--cache", action="store_true",
+                    help="semantic-cache mode: Zipfian hot-rect sweep + "
+                         "MVCC pin drill + BENCH_queries.json (DESIGN.md §9)")
     ap.add_argument("--backend", choices=("numpy", "device", "both"),
                     default="both", help="which query_batch backend(s) to sweep")
     ap.add_argument("--smoke", action="store_true",
@@ -740,7 +855,11 @@ if __name__ == "__main__":
     ap.add_argument("--rows", type=int, default=None)
     ap.add_argument("--queries", type=int, default=None)
     args = ap.parse_args()
-    if args.failover:
+    if args.cache:
+        run_cache(rows=args.rows or 100_000,
+                  n_queries=args.queries or (192 if args.smoke else 512),
+                  smoke=args.smoke)
+    elif args.failover:
         run_failover(rows=args.rows or 50_000,
                      n_queries=args.queries or (48 if args.smoke else 96),
                      smoke=args.smoke)

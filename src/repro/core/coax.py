@@ -157,6 +157,10 @@ class COAXIndex:
         self._last_compact_relearned = False
         self._viol_total = {}           # per-group arriving-row counts and
         self._viol_bad = {}             # margin violations since tracker reseed
+        self.cache = None               # engine.cache.SemanticCache (§9.2)
+        self.last_cache_stats = None    # CacheLookup of the latest wave
+        self._pins = {}                 # epoch -> live EpochPin count (§9.3)
+        self._id_order_cache = None     # (argsort, sorted ids) of row_ids
 
     # ------------------------------------------------------------------ #
     @property
@@ -294,6 +298,11 @@ class COAXIndex:
         kd, spill = self._delta_key_dim(), self.config.delta_l0_spill
         self.delta_primary = DeltaPlane(self.n_dims, key_dim=kd, l0_spill=spill)
         self.delta_outlier = DeltaPlane(self.n_dims, key_dim=kd, l0_spill=spill)
+        # the id->row gather index follows the snapshot arrays (§9.2); any
+        # attached SemanticCache survives the swap untouched — its entries
+        # are keyed on the pre-swap version and simply never match again,
+        # and live EpochPins (§9.3) hold their own refs to the old epoch
+        self._id_order_cache = None
 
     def _delta_key_dim(self) -> int:
         """Run key for the delta planes (DESIGN.md §5.3): the first FD
@@ -901,6 +910,11 @@ class COAXIndex:
         pipelined callers may drive directly to overlap waves); waves whose
         candidate cells overflow ``cell_cap`` fall back to the host path.
         Either way the answer is bit-identical to the numpy backend.
+
+        With an attached ``SemanticCache`` (``attach_cache``) the wave is
+        consulted first (DESIGN.md §9.2): exact/contained rects answer from
+        the cache, only the misses run the pipeline (and are admitted
+        back), and the merged answer is bit-identical to the uncached path.
         """
         self._poll_entry()
         rects = np.asarray(rects, dtype=np.float64)
@@ -908,13 +922,25 @@ class COAXIndex:
         if b == 0:
             self.last_batch_stats = BatchStats(backend=self.backend)
             return np.empty(0, np.int64), np.empty(0, np.int64)
-        nav = self.translate_batch(rects)
         if self.backend == "device":
-            return self.query_batch_collect(
-                self.query_batch_submit(rects, nav=nav))
-        q_p, r_p, stats = self._query_batch_host(rects, nav)
-        self.last_batch_stats = stats
-        return q_p, r_p
+            return self.query_batch_collect(self.query_batch_submit(rects))
+        route = self._cache_route(rects)
+        if route is None:
+            q_p, r_p, stats = self._query_batch_host(rects,
+                                                     self.translate_batch(rects))
+            self.last_batch_stats = stats
+            return q_p, r_p
+        answers, miss, version = route
+        if miss.size:
+            sub = np.ascontiguousarray(rects[miss])
+            q_m, r_m, stats = self._query_batch_host(sub,
+                                                     self.translate_batch(sub))
+            self._cache_admit(version, sub, q_m, r_m)
+        else:
+            q_m = r_m = np.empty(0, np.int64)
+            stats = BatchStats(backend=self.backend)
+        self.last_batch_stats = dataclasses.replace(stats, queries=b)
+        return self._merge_cached(answers, miss, q_m, r_m)
 
     def _query_batch_host(self, rects: np.ndarray, nav: np.ndarray,
                           fallbacks: int = 0):
@@ -963,6 +989,147 @@ class COAXIndex:
         return q_p, r_p, stats
 
     # ------------------------------------------------------------------ #
+    # Semantic result cache (DESIGN.md §9.1–§9.2) + pinned-epoch MVCC
+    # reads (§9.3).  The cache consults BEFORE the pipeline and admits
+    # after it; pins capture the current epoch's objects for readers that
+    # must stay on it across background-compaction handoffs.
+    # ------------------------------------------------------------------ #
+    def attach_cache(self, byte_budget: int = 64 << 20,
+                     max_entries: int = 512,
+                     shard_id: Optional[int] = None) -> "COAXIndex":
+        """Attach a rect-containment ``SemanticCache`` (DESIGN.md §9.2) to
+        every batched read path (numpy and device).  ``shard_id`` is set by
+        ``ShardedCOAX.attach_cache`` so entries key on (shard, the shard's
+        OWN version), never an aggregate epoch.  Returns self."""
+        from ..engine.cache import SemanticCache
+        self.cache = SemanticCache(byte_budget=byte_budget,
+                                   max_entries=max_entries,
+                                   shard_id=shard_id)
+        self.last_cache_stats = None
+        return self
+
+    def detach_cache(self) -> None:
+        self.cache = None
+        self.last_cache_stats = None
+
+    def _cache_version(self) -> tuple:
+        """The write-state version cache entries are keyed on (§9.2):
+        epoch plus both planes' log/tombstone counters.  Every component
+        is monotone within an epoch and the epoch is monotone across
+        compactions, so ANY write — insert, delete, or an installed
+        handoff — moves the key and strands stale entries."""
+        dp, do = self.delta_primary, self.delta_outlier
+        return (self.epoch, dp.n_log, dp.n_tombstones,
+                do.n_log, do.n_tombstones)
+
+    def _cache_route(self, rects: np.ndarray):
+        """Consult the cache for a wave: ``None`` when no cache is
+        attached, else ``(answers, miss_indices, version)`` with per-wave
+        stats latched on ``last_cache_stats`` (read by the executor at
+        submit time, §9.2)."""
+        if self.cache is None:
+            return None
+        version = self._cache_version()
+        answers, stats = self.cache.lookup_wave(version, rects)
+        self.last_cache_stats = stats
+        miss = np.array([i for i, a in enumerate(answers) if a is None],
+                        dtype=np.int64)
+        return answers, miss, version
+
+    def _cache_admit(self, version: tuple, rects: np.ndarray,
+                     qids: np.ndarray, rids: np.ndarray) -> None:
+        """Admit freshly answered rects.  Skipped wholesale when the live
+        version moved since the wave was routed (the §9.2 stale-admission
+        gate: a pipelined device wave may drain after writes — or a
+        handoff — landed; its answer is correct for the OLD version but
+        must not be stored under the new key)."""
+        if self.cache is None or version != self._cache_version():
+            return
+        for rect, ids in zip(rects, split_hits(qids, rids, rects.shape[0])):
+            self.cache.admit(version, rect, ids, self.rows_for_ids(ids))
+
+    @staticmethod
+    def _merge_cached(answers, miss, q_m, r_m):
+        """Merge cached per-query answers with the miss sub-batch's flat
+        hits back into the ``query_batch`` contract (lexsorted by
+        (query, row); cached id arrays are already sorted)."""
+        qs, rs = [], []
+        for i, a in enumerate(answers):
+            if a is not None and a.size:
+                qs.append(np.full(a.size, i, dtype=np.int64))
+                rs.append(a)
+        if q_m.size:
+            qs.append(miss[q_m])
+            rs.append(r_m)
+        if not qs:
+            return np.empty(0, np.int64), np.empty(0, np.int64)
+        q = np.concatenate(qs)
+        r = np.concatenate(rs)
+        order = np.lexsort((r, q))
+        return q[order], r[order]
+
+    def rows_for_ids(self, ids: np.ndarray) -> np.ndarray:
+        """(m, D) f32 row values for LIVE original ids — the §9.2 cache-
+        admission gather.  Snapshot ids resolve through a cached argsort of
+        ``row_ids`` (reset at every epoch install), the rest through the
+        delta planes' own gathers.  Raises ``KeyError`` for ids in neither
+        (a query's hit ids are always resolvable at its own version)."""
+        ids = np.asarray(ids, dtype=np.int64)
+        out = np.empty((ids.shape[0], self.n_dims), dtype=np.float32)
+        if ids.size == 0:
+            return out
+        if self._id_order_cache is None:
+            order = np.argsort(self.row_ids, kind="stable")
+            self._id_order_cache = (order, self.row_ids[order])
+        order, sids = self._id_order_cache
+        if sids.size:
+            pos = np.searchsorted(sids, ids)
+            pos[pos == sids.size] = sids.size - 1
+            found = sids[pos] == ids
+            if found.any():
+                out[found] = self.data[order[pos[found]]]
+        else:
+            found = np.zeros(ids.shape, dtype=bool)
+        rest = np.nonzero(~found)[0]
+        if rest.size:
+            f1, rows1 = self.delta_primary.rows_for_ids(ids[rest])
+            out[rest[f1]] = rows1
+            rem = rest[~f1]
+            if rem.size:
+                f2, rows2 = self.delta_outlier.rows_for_ids(ids[rem])
+                out[rem[f2]] = rows2
+                if not f2.all():
+                    raise KeyError(
+                        f"{int((~f2).sum())} ids not in snapshot or delta logs")
+        return out
+
+    def pin_epoch(self):
+        """Open an MVCC read handle on the CURRENT epoch (DESIGN.md §9.3):
+        the returned ``EpochPin`` keeps this epoch's grids, device plan and
+        a frozen delta image alive — refcounted in ``_pins`` — so its
+        answers stay bit-identical to this instant while writes and
+        background-compaction handoffs (§5.4) move the serving index to
+        newer epochs.  Release (or ``with``-exit) the pin to free the old
+        epoch once the serving index has moved on."""
+        self._poll_entry()
+        from ..engine.cache import EpochPin
+        pin = EpochPin(self)
+        self._pins[pin.epoch] = self._pins.get(pin.epoch, 0) + 1
+        return pin
+
+    def _release_pin(self, epoch: int) -> None:
+        n = self._pins.get(epoch, 0)
+        if n <= 1:
+            self._pins.pop(epoch, None)
+        else:
+            self._pins[epoch] = n - 1
+
+    @property
+    def pinned_epochs(self) -> List[int]:
+        """Epochs with at least one live ``EpochPin`` (§9.3)."""
+        return sorted(self._pins)
+
+    # ------------------------------------------------------------------ #
     # Device wave pipelining (DESIGN.md §4): submit launches the fused
     # kernel without transferring results; collect is the drain point.
     # ------------------------------------------------------------------ #
@@ -999,9 +1166,30 @@ class COAXIndex:
         the handle ALWAYS reflects this submit's snapshot+delta state even
         if writes land before collection (per-wave snapshot semantics).
         A finished background build is folded in HERE, before the wave's
-        snapshot is captured — wave-boundary handoff visibility (§5.4)."""
+        snapshot is captured — wave-boundary handoff visibility (§5.4).
+        With a cache attached the wave is consulted against it first and
+        only the misses are submitted; the handle carries the cached
+        answers so ``query_batch_collect`` can merge them back (§9.2)."""
         self._poll_entry()
         rects = np.asarray(rects, dtype=np.float64)
+        route = self._cache_route(rects) if rects.shape[0] else None
+        if route is None:
+            return self._submit_uncached(rects, nav)
+        answers, miss, version = route
+        if miss.size == rects.shape[0]:          # all missed: plain wave
+            sub = rects
+            inner = self._submit_uncached(rects, nav)
+        elif miss.size:                          # partial: submit subset
+            sub = np.ascontiguousarray(rects[miss])
+            inner = self._submit_uncached(sub, None)
+        else:                                    # fully answered from cache
+            sub = rects[:0]
+            inner = ("host", np.empty(0, np.int64), np.empty(0, np.int64),
+                     BatchStats(backend=self.backend))
+        return ("cache", answers, miss, version, sub, inner)
+
+    def _submit_uncached(self, rects: np.ndarray,
+                         nav: Optional[np.ndarray] = None):
         if nav is None:
             nav = self.translate_batch(rects) if rects.shape[0] else None
         fallbacks = 0
@@ -1020,7 +1208,21 @@ class COAXIndex:
 
     def query_batch_collect(self, handle) -> Tuple[np.ndarray, np.ndarray]:
         """Drain one submitted wave (``jax.block_until_ready`` + transfer of
-        the compacted hit buffers) and return its ``query_batch`` answer."""
+        the compacted hit buffers) and return its ``query_batch`` answer.
+        Cache-wrapped handles drain the miss sub-wave, admit its answers
+        (gated on the version still matching, §9.2), and merge with the
+        handle's cached answers."""
+        if handle[0] != "cache":
+            return self._collect_uncached(handle)
+        _, answers, miss, version, sub, inner = handle
+        q_m, r_m = self._collect_uncached(inner)
+        if miss.size:
+            self._cache_admit(version, sub, q_m, r_m)
+        self.last_batch_stats = dataclasses.replace(
+            self.last_batch_stats, queries=len(answers))
+        return self._merge_cached(answers, miss, q_m, r_m)
+
+    def _collect_uncached(self, handle) -> Tuple[np.ndarray, np.ndarray]:
         if handle[0] == "host":
             _, q, r, stats = handle
             self.last_batch_stats = stats
@@ -1062,9 +1264,10 @@ class COAXIndex:
         delta_bytes = self.delta_primary.nbytes() + self.delta_outlier.nbytes()
         wal_pending = (self.durable.wal_pending_bytes
                        if self.durable is not None else 0)
+        cache_bytes = self.cache.nbytes if self.cache is not None else 0
         return (self.primary.memory_footprint() + self.outlier.memory_footprint()
                 + model_bytes + tracker_bytes + bbox_bytes + delta_bytes
-                + wal_pending)
+                + wal_pending + cache_bytes)
 
     def describe(self) -> dict:
         return {
@@ -1104,6 +1307,8 @@ class COAXIndex:
             "outlier_bbox_bytes": (self._outlier_lo.nbytes + self._outlier_hi.nbytes
                                    if self._outlier_lo is not None else 0),
             "memory_footprint_bytes": self.memory_footprint(),
+            "pinned_epochs": self.pinned_epochs,
+            "cache": (self.cache.describe() if self.cache is not None else None),
             "durability": (self.durable.describe()
                            if self.durable is not None else None),
         }

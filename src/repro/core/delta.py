@@ -63,7 +63,7 @@ import numpy as np
 
 from .types import Rect, rect_contains, sorted_contains
 
-__all__ = ["DeltaPlane"]
+__all__ = ["DeltaPlane", "FrozenDelta"]
 
 L0_SPILL_DEFAULT = 256
 
@@ -121,6 +121,7 @@ class DeltaPlane:
         self._live_cache: Optional[Tuple[np.ndarray, np.ndarray]] = None
         self._alive_cache: Optional[np.ndarray] = None
         self._dead_cache: Optional[np.ndarray] = None
+        self._order_cache: Optional[np.ndarray] = None   # argsort of log_ids
 
     # ------------------------------------------------------------------ #
     @property
@@ -168,6 +169,7 @@ class DeltaPlane:
         self._rows_cache = self._ids_cache = None
         self._rows64_cache = None
         self._live_cache = None
+        self._order_cache = None
         if self._alive_cache is not None:   # fresh ids are never dead
             self._alive_cache = np.concatenate(
                 [self._alive_cache, np.ones(m, dtype=bool)])
@@ -366,6 +368,35 @@ class DeltaPlane:
         p = np.concatenate(pos_parts)
         return q, self.log_ids()[p]
 
+    def rows_for_ids(self, ids: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """(found_mask, rows) for ``ids`` among this plane's log entries —
+        the cache-admission gather (DESIGN.md §9.2): a query's hit ids must
+        be re-joined to their row values so a contained sub-query can later
+        be filtered from the cached superset without re-probing.  The
+        argsort of the append-order ids is cached (reset on insert), so a
+        gather is two ``searchsorted`` passes, not a re-sort per wave."""
+        ids = np.asarray(ids, dtype=np.int64)
+        lids = self.log_ids()
+        if ids.size == 0 or lids.size == 0:
+            return (np.zeros(ids.shape, dtype=bool),
+                    np.empty((0, self.n_dims), np.float32))
+        if self._order_cache is None:
+            self._order_cache = np.argsort(lids, kind="stable")
+        order = self._order_cache
+        sids = lids[order]
+        pos = np.searchsorted(sids, ids)
+        pos[pos == sids.size] = sids.size - 1
+        found = sids[pos] == ids
+        return found, self._log_rows()[order[pos[found]]]
+
+    def freeze(self) -> "FrozenDelta":
+        """Immutable point-in-time image of the LIVE log — the delta half
+        of a pinned-epoch MVCC read (DESIGN.md §9.3).  Rows are copied and
+        upcast once, so later appends/tombstones on this plane can never
+        leak into a pinned reader's answers."""
+        rows, ids = self.live_log()
+        return FrozenDelta(rows, ids)
+
     # ------------------------------------------------------------------ #
     def state_dict(self) -> dict:
         """Serializable state: the append log (dead rows included, order
@@ -433,3 +464,54 @@ class DeltaPlane:
             "merges": self.merges,
             "rows_probed": self.rows_probed,
         }
+
+
+class FrozenDelta:
+    """Immutable snapshot of a ``DeltaPlane``'s live log at freeze time —
+    the write-plane half of a pinned-epoch MVCC read (DESIGN.md §9.3).
+
+    A pinned reader composes exactly what the live host path composes —
+    (snapshot hits − frozen tombstones) ∪ frozen-delta hits — but against
+    state that can never move: rows are a private f64 copy (the same upcast
+    the live ``scan_batch`` compares under, so membership is bit-identical),
+    and tombstones were already folded into the pin's frozen dead-id array.
+    Run structure is deliberately NOT carried over: a pin is a bounded
+    analytical read, the frozen log is bounded by the compaction trigger,
+    and the dense scan is the simplest thing that is provably the same
+    predicate."""
+
+    def __init__(self, rows: np.ndarray, ids: np.ndarray):
+        self._rows64 = np.array(rows, dtype=np.float64)   # private copy
+        self._ids = np.array(ids, dtype=np.int64)
+
+    @property
+    def n_live(self) -> int:
+        return int(self._ids.shape[0])
+
+    def scan(self, rect: Rect) -> np.ndarray:
+        """Ids of frozen live rows inside ``rect`` (unsorted)."""
+        if self._ids.size == 0:
+            return np.empty(0, np.int64)
+        return self._ids[rect_contains(np.asarray(rect, np.float64),
+                                       self._rows64)]
+
+    def scan_batch(self, rects: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Exact batched scan over the frozen rows: flat (query_ids,
+        row_ids), same half-open f64 predicate as ``DeltaPlane.scan_batch``
+        — a pinned answer is bit-identical to what the live path returned
+        at pin time."""
+        rects = np.asarray(rects, dtype=np.float64)
+        b = rects.shape[0]
+        m = self._ids.shape[0]
+        if b == 0 or m == 0:
+            return np.empty(0, np.int64), np.empty(0, np.int64)
+        hit = np.ones((b, m), dtype=bool)
+        for j in range(self._rows64.shape[1]):
+            v = self._rows64[:, j]
+            np.logical_and(hit, v[None, :] >= rects[:, j, 0][:, None], out=hit)
+            np.logical_and(hit, v[None, :] < rects[:, j, 1][:, None], out=hit)
+        qf, pf = np.nonzero(hit)
+        return qf.astype(np.int64), self._ids[pf]
+
+    def nbytes(self) -> int:
+        return int(self._rows64.nbytes + self._ids.nbytes)

@@ -16,6 +16,11 @@ behind one scatter-gather plane, each with its own FDs, delta and epochs.
                          ``recover()`` restart constructor (§7)
 ``ShardedCOAX``        — sharded scatter-gather serving plane (§6); journals
                          per shard via ``repro.storage`` (§7.6)
+``SemanticCache``      — rect-containment result cache, exact by nav⊇filter
+                         and version-keyed for free invalidation (§9.1–§9.2)
+``EpochPin``           — pinned-epoch MVCC read handle (``ShardedEpochPin``
+                         for a plane): bit-identical snapshot reads across
+                         background-compaction handoffs (§9.3)
 ``DevicePlan``         — device-resident serving plane for one grid (§4)
 ``CoaxDevicePlan``     — the COAX megakernel plan: primary + outlier +
                          delta/tombstone segments fused into ONE kernel
@@ -25,6 +30,7 @@ behind one scatter-gather plane, each with its own FDs, delta and epochs.
                          imported lazily so the numpy engine works
                          without jax
 """
+from .cache import CacheLookup, EpochPin, SemanticCache, ShardedEpochPin
 from .executor import BatchQueryExecutor, WaveStats, split_hits
 from .server import PendingQuery, QueryServer
 from .sharded import ShardedCOAX, partition_rows
@@ -37,6 +43,10 @@ __all__ = [
     "PendingQuery",
     "ShardedCOAX",
     "partition_rows",
+    "SemanticCache",
+    "CacheLookup",
+    "EpochPin",
+    "ShardedEpochPin",
     "DevicePlan",
     "CoaxDevicePlan",
     "device_available",

@@ -530,6 +530,12 @@ class CoaxDevicePlan(_PlanBase):
     counters move.  Tickets capture every host array a drain-time re-answer
     needs, so collecting after further writes still answers from the wave's
     submit-time snapshot.
+
+    §9.3 pin retention: an ``EpochPin`` holds a strong reference to the
+    plan that was live at pin time, so a compaction's ``adopt()`` of a new
+    epoch never drops the jit cache out from under a pinned reader — but
+    pinned QUERIES never dispatch through the plan; they run the exact
+    host composition over the pin's frozen arrays (``engine.cache``).
     """
 
     def __init__(self, index, *, cell_cap: int = 256, tile: int = 512,

@@ -62,6 +62,9 @@ class WaveStats:
     shards_hit: int = 0          # shards the wave scattered to (§6; 0 = unsharded)
     shard_stats: tuple = ()      # per-shard (queries, rows_scanned,
                                  # cells_probed, fallbacks) this wave (§6)
+    cache_hits: int = 0          # queries answered exactly from the §9 cache
+    cache_partial: int = 0       # queries answered by containment filtering
+    cache_bytes: int = 0         # cache residency when the wave was routed
 
     @property
     def qps(self) -> float:
@@ -85,11 +88,15 @@ class BatchQueryExecutor:
         unchanged; a mutable single index (``live_rows`` + ``config``) is
         re-partitioned into a ``ShardedCOAX`` over its live rows.  Waves then
         carry per-shard rollups in ``WaveStats.shard_stats``.
+    cache_bytes : byte budget for a §9 semantic result cache attached to
+        the index (``attach_cache``); ``None`` leaves caching off.  Hit
+        rollups land in ``WaveStats``/``stats()``.
     """
 
     def __init__(self, index, max_batch: int = 64,
                  backend: Optional[str] = None,
-                 shards: Optional[int] = None):
+                 shards: Optional[int] = None,
+                 cache_bytes: Optional[int] = None):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         if shards is not None:
@@ -117,6 +124,12 @@ class BatchQueryExecutor:
             elif backend != "numpy":
                 raise ValueError(
                     f"{type(index).__name__} has no device backend")
+        if cache_bytes is not None:
+            attach = getattr(self.index, "attach_cache", None)
+            if attach is None:
+                raise ValueError(
+                    f"{type(self.index).__name__} has no attach_cache")
+            attach(byte_budget=int(cache_bytes))
 
     @property
     def backend(self) -> str:
@@ -152,16 +165,23 @@ class BatchQueryExecutor:
         rids = np.concatenate(hits) if hits else np.empty(0, np.int64)
         return qids, rids
 
-    def _wave_meta(self) -> Tuple[int, int, int]:
-        """Epoch/delta/tombstone state captured at SUBMIT time — the frozen
-        snapshot + write-plane state the wave is answered from (§4/§5)."""
+    def _wave_meta(self) -> Tuple[int, int, int, Tuple[int, int, int]]:
+        """Epoch/delta/tombstone + §9 cache state captured at SUBMIT time —
+        the frozen snapshot + write-plane state the wave is answered from
+        (§4/§5).  Cache stats MUST be read here, not at drain: a pipelined
+        wave ``i+1`` routes through the cache (overwriting the index's
+        ``last_cache_stats``) before wave ``i`` drains."""
+        cs = getattr(self.index, "last_cache_stats", None)
+        cache = (cs.hits, cs.partial, cs.bytes) if cs is not None else (0, 0, 0)
         return (int(getattr(self.index, "epoch", 0)),
                 int(getattr(self.index, "delta_rows", 0)),
-                int(getattr(self.index, "tombstone_count", 0)))
+                int(getattr(self.index, "tombstone_count", 0)),
+                cache)
 
     def _record_wave(self, wave: np.ndarray, qids: np.ndarray,
                      rids: np.ndarray, t0: float,
-                     meta: Tuple[int, int, int]) -> List[np.ndarray]:
+                     meta: Tuple[int, int, int, Tuple[int, int, int]]
+                     ) -> List[np.ndarray]:
         """Shared drain-side bookkeeping: wall-clock accounting, per-wave
         stats row, hit splitting.  ``latency_s`` is submit→drain; the busy
         accumulator only charges time not already charged to an overlapping
@@ -186,7 +206,9 @@ class BatchQueryExecutor:
             hit_overflows=getattr(bs, "hit_overflows", 0) if bs else 0,
             epoch=meta[0], delta_rows=meta[1], tombstones=meta[2],
             shards_hit=sum(1 for s in shard_stats if s[0] > 0),
-            shard_stats=shard_stats))
+            shard_stats=shard_stats,
+            cache_hits=meta[3][0], cache_partial=meta[3][1],
+            cache_bytes=meta[3][2]))
         return split_hits(qids, rids, wave.shape[0])
 
     # -- split wave API (device pipelining; DESIGN.md §4) -------------- #
@@ -262,11 +284,19 @@ class BatchQueryExecutor:
                 {"queries": int(a[0]), "rows_scanned": int(a[1]),
                  "cells_probed": int(a[2]), "fallbacks": int(a[3])}
                 for a in acc]
+        cache_hits = sum(w.cache_hits for w in self.wave_stats)
+        cache_partial = sum(w.cache_partial for w in self.wave_stats)
         return {
             "shards": n_shards,
             "per_shard": per_shard,
             "waves": len(self.wave_stats),
             "queries": total_q,
+            "cache_hits": cache_hits,
+            "cache_partial": cache_partial,
+            "cache_hit_rate": ((cache_hits + cache_partial) / total_q
+                               if total_q else 0.0),
+            "cache_bytes": (self.wave_stats[-1].cache_bytes
+                            if self.wave_stats else 0),
             "hits": sum(w.n_hits for w in self.wave_stats),
             "rows_scanned": sum(w.rows_scanned for w in self.wave_stats),
             "cells_probed": sum(w.cells_probed for w in self.wave_stats),

@@ -60,6 +60,8 @@ class QueryServer:
         stamped with the journal position, DESIGN.md §7) every this many
         drained waves; None disables the cadence.  No-op unless the index
         has a durability plane attached.
+    cache_bytes : byte budget for a §9 semantic result cache on the served
+        index (forwarded to ``BatchQueryExecutor``); None leaves it off.
     shutdown : a ``runtime.failure.GracefulShutdown`` to honour: when its
         flag flips (SIGTERM on a managed host), ``drain`` finishes the
         in-flight wave, stops forming new ones, and returns — the caller
@@ -72,9 +74,11 @@ class QueryServer:
                  backend: Optional[str] = None,
                  shards: Optional[int] = None,
                  checkpoint_every: Optional[int] = None,
+                 cache_bytes: Optional[int] = None,
                  shutdown=None):
         self.executor = executor or BatchQueryExecutor(
-            index, max_batch=max_batch, backend=backend, shards=shards)
+            index, max_batch=max_batch, backend=backend, shards=shards,
+            cache_bytes=cache_bytes)
         self.checkpoint_every = checkpoint_every
         self.shutdown = shutdown
         self.closed = False
@@ -110,7 +114,14 @@ class QueryServer:
     # ------------------------------------------------------------------ #
     def submit(self, rect: np.ndarray, priority: float = 0.0,
                arrival: Optional[float] = None) -> int:
-        """Queue one rect; returns its query id."""
+        """Queue one rect; returns its query id.
+
+        ``arrival`` defaults to ``time.perf_counter()`` — the SAME clock
+        the executor's wave timing uses and the one callers supplying
+        explicit stamps are documented against.  (It used to default to
+        ``time.time()``: epoch-seconds ~1.7e9 vs perf-counter seconds
+        meant the drain sort compared stamps from two different clocks,
+        so any explicit-arrival query always out-sorted defaults.)"""
         rect = np.asarray(rect, dtype=np.float64)
         if rect.ndim != 2 or rect.shape[1] != 2:
             raise ValueError(f"rect must be (D, 2), got {rect.shape}")
@@ -120,7 +131,7 @@ class QueryServer:
         qid = next(self._ids)
         self._pending[qid] = PendingQuery(
             qid, rect, priority,
-            arrival if arrival is not None else time.time())
+            arrival if arrival is not None else time.perf_counter())
         return qid
 
     def submit_many(self, rects: np.ndarray, priority: float = 0.0) -> List[int]:
@@ -130,6 +141,21 @@ class QueryServer:
         """Remove a pending query before it is drained; True iff it was
         still pending (False: unknown id, or already answered)."""
         return self._pending.pop(qid, None) is not None
+
+    def pin_epoch(self):
+        """Open an MVCC read handle on the served index (DESIGN.md §9.3).
+
+        Queued writes are flushed FIRST so the pin captures the state a
+        drain at this instant would serve, then the index's ``pin_epoch``
+        freezes it: the handle answers bit-identically to now while
+        subsequent drains, writes, and background-compaction handoffs move
+        the server forward.  Release the handle to free the old epoch."""
+        index = self.executor.index
+        pin = getattr(index, "pin_epoch", None)
+        if pin is None:
+            raise TypeError(f"{type(index).__name__} has no pin_epoch")
+        self.flush_writes()
+        return pin()
 
     # ------------------------------------------------------------------ #
     # Write admission (DESIGN.md §5)

@@ -33,6 +33,7 @@ import numpy as np
 from ..core import COAXIndex, CoaxConfig
 from ..core.gridfile import BatchStats
 from ..core.types import Rect, split_hits
+from .cache import CacheLookup
 
 __all__ = ["ShardedCOAX", "partition_rows"]
 
@@ -141,6 +142,8 @@ class ShardedCOAX:
         self.last_shard_stats: List[BatchStats] = [BatchStats()
                                                    for _ in self.shards]
         self.durable = None     # storage.ShardedDurability, via attach_durability
+        self.last_cache_stats = None   # merged CacheLookup of the last wave (§9)
+        self._cache_attached = False
         self.backend = backend
 
     # ------------------------------------------------------------------ #
@@ -211,6 +214,8 @@ class ShardedCOAX:
         out.last_batch_stats = BatchStats()
         out.last_shard_stats = [BatchStats() for _ in out.shards]
         out.durable = None
+        out.last_cache_stats = None
+        out._cache_attached = False
         out.backend = backend
         return out
 
@@ -279,7 +284,12 @@ class ShardedCOAX:
     @property
     def epoch(self) -> int:
         """Monotone plane version: total compactions across shards (each
-        shard's epoch advances independently; the sum stamps wave stats)."""
+        shard's epoch advances independently; the sum stamps wave stats).
+
+        The sum is AMBIGUOUS as a cache/snapshot key — shard A at epoch 2 +
+        shard B at 0 sums the same as A at 1 + B at 1 — so the §9 semantic
+        cache never keys on it: ``attach_cache`` gives each shard its own
+        cache keyed on ``(shard_id, the shard's OWN version)``."""
         return sum(s.epoch for s in self.shards)
 
     @property
@@ -307,6 +317,41 @@ class ShardedCOAX:
         """Join every shard's in-flight background compaction — the
         graceful-shutdown barrier, fanned out."""
         return self.poll_handoff(wait=True)
+
+    # ------------------------------------------------------------------ #
+    # Semantic cache + MVCC pins (DESIGN.md §9), fanned out per shard
+    # ------------------------------------------------------------------ #
+    def attach_cache(self, byte_budget: int = 64 << 20,
+                     max_entries: int = 512) -> "ShardedCOAX":
+        """Attach one §9.2 ``SemanticCache`` PER SHARD (budget split K
+        ways), each keyed on ``(shard_id, the shard's own version)`` —
+        never the aggregate ``epoch`` sum, which is ambiguous (a compaction
+        in shard A and an insert in shard B can collide).  Returns self."""
+        per = max(int(byte_budget) // self.n_shards, 1)
+        for k, s in enumerate(self.shards):
+            s.attach_cache(byte_budget=per, max_entries=max_entries,
+                           shard_id=k)
+        self._cache_attached = True
+        self.last_cache_stats = None
+        return self
+
+    def detach_cache(self) -> None:
+        for s in self.shards:
+            s.detach_cache()
+        self._cache_attached = False
+        self.last_cache_stats = None
+
+    def pin_epoch(self):
+        """One §9.3 MVCC handle over the whole plane: pins every shard's
+        current epoch at once (plus frozen copies of the pruning bboxes),
+        so scatter-gather reads through the handle stay bit-identical to
+        this instant while any shard compacts underneath."""
+        from .cache import ShardedEpochPin
+        return ShardedEpochPin(self)
+
+    @property
+    def pinned_epochs(self) -> List[List[int]]:
+        return [s.pinned_epochs for s in self.shards]
 
     # ------------------------------------------------------------------ #
     # Write path: route per shard, ids from one global sequence
@@ -407,6 +452,7 @@ class ShardedCOAX:
         q_parts: List[np.ndarray] = []
         r_parts: List[np.ndarray] = []
         merged = BatchStats(queries=b, backend=self.backend)
+        cache_stats = None
         for k in range(self.n_shards):
             if not touch[k].any():
                 continue
@@ -416,11 +462,17 @@ class ShardedCOAX:
                                           queries=int(touch[k].sum()))
             self.last_shard_stats[k] = stats_k
             merged = merged.merge(stats_k)
+            cs_k = self.shards[k].last_cache_stats
+            if cs_k is not None:
+                cache_stats = cs_k if cache_stats is None \
+                    else cache_stats.merge(cs_k)
             if r_k.size:
                 q_parts.append(np.nonzero(touch[k])[0][q_k])
                 r_parts.append(r_k)
         merged.queries = b
         self.last_batch_stats = merged
+        if self._cache_attached:
+            self.last_cache_stats = cache_stats or CacheLookup()
         if not q_parts:
             return np.empty(0, np.int64), np.empty(0, np.int64)
         qids = np.concatenate(q_parts)
@@ -466,6 +518,9 @@ class ShardedCOAX:
             "delta_runs": [s.delta_primary.n_runs + s.delta_outlier.n_runs
                            for s in self.shards],
             "shard_epochs": [s.epoch for s in self.shards],
+            "cache": ([s.cache.describe() for s in self.shards]
+                      if self._cache_attached else None),
+            "pinned_epochs": self.pinned_epochs,
             "shard_groups": [[(g.predictor, list(g.dependents))
                               for g in s.groups] for s in self.shards],
             "memory_footprint_bytes": self.memory_footprint(),

@@ -1,0 +1,87 @@
+"""BENCH-file section merging (benchmarks/bench_queries.py).
+
+Regression coverage for the shared-file clobbering bugs: ``run_batch``
+used to merge-preserve only the ``"sharded"`` key of BENCH_queries.json
+(anything else — including the cache section — was silently dropped) and
+``run_mixed`` overwrote BENCH_updates.json wholesale.  Every writer now
+routes through ``_write_bench_section``: one mode owns one top-level
+section and every foreign key survives a re-run of any sibling mode.
+"""
+import json
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.bench_queries import (_read_bench_json, _write_bench_section,
+                                      run_batch, run_cache, run_mixed,
+                                      run_sharded)
+
+ALL_SECTIONS = ("batch", "sharded", "cache", "mixed", "recover", "failover")
+
+
+def test_write_bench_section_round_trip_all_modes(tmp_path):
+    """Writing every mode's section in sequence — twice, in two orders —
+    loses nothing: the pre-seeded foreign key and every section survive."""
+    out = tmp_path / "BENCH.json"
+    out.write_text(json.dumps({"foreign_tool_key": {"keep": "me"}}))
+    for i, section in enumerate(ALL_SECTIONS):
+        _write_bench_section(out, "unused-default.json", section, {"run": i})
+    for i, section in enumerate(reversed(ALL_SECTIONS)):  # re-run, reordered
+        _write_bench_section(out, "unused-default.json", section,
+                             {"run": 100 + i})
+    doc = json.loads(out.read_text())
+    assert doc["foreign_tool_key"] == {"keep": "me"}
+    for i, section in enumerate(reversed(ALL_SECTIONS)):
+        assert doc[section] == {"run": 100 + i}       # last write wins...
+    assert set(doc) == {"foreign_tool_key", *ALL_SECTIONS}  # ...nothing lost
+
+
+def test_write_bench_section_tolerates_corrupt_file(tmp_path):
+    out = tmp_path / "BENCH.json"
+    out.write_text("{not json")
+    _write_bench_section(out, "unused-default.json", "batch", {"ok": 1})
+    assert json.loads(out.read_text()) == {"batch": {"ok": 1}}
+    assert _read_bench_json(tmp_path / "missing.json") == {}
+
+
+def test_queries_bench_writers_preserve_foreign_sections(tmp_path):
+    """REAL runs of every BENCH_queries.json writer against one file: each
+    mode lands in its own section and no run disturbs the others."""
+    out = tmp_path / "BENCH_queries.json"
+    out.write_text(json.dumps({"sentinel": 42}))
+    run_batch(rows=2_000, n_queries=16, batch_sizes=(1, 8),
+              out_path=str(out), backend="numpy")
+    run_sharded(rows=2_000, n_queries=16, shard_counts=(1, 2),
+                out_path=str(out))
+    run_cache(rows=2_000, n_queries=32, n_hot=4, out_path=str(out),
+              smoke=True)
+    doc = json.loads(out.read_text())
+    assert doc["sentinel"] == 42
+    assert set(doc) == {"sentinel", "batch", "sharded", "cache"}
+    assert doc["batch"]["single_qps"] > 0
+    assert doc["sharded"]["shards"]["2"]["qps"] > 0
+    assert doc["cache"]["warm_hit_rate"] > 0
+    assert doc["cache"]["mvcc"]["pinned_agreement"] is True
+    # a re-run of one mode leaves the other two sections byte-identical
+    before = {k: doc[k] for k in ("sharded", "cache")}
+    run_batch(rows=2_000, n_queries=16, batch_sizes=(1, 8),
+              out_path=str(out), backend="numpy")
+    doc2 = json.loads(out.read_text())
+    assert doc2["sentinel"] == 42
+    assert {k: doc2[k] for k in ("sharded", "cache")} == before
+
+
+def test_mixed_bench_writer_preserves_foreign_sections(tmp_path):
+    """Regression: run_mixed used to clobber BENCH_updates.json wholesale."""
+    out = tmp_path / "BENCH_updates.json"
+    out.write_text(json.dumps({"other_bench": {"qps": 1.0}, "sentinel": 7}))
+    run_mixed(rows=1_500, n_queries=64, insert_ratios=(0.25,), batch=32,
+              out_path=str(out))
+    doc = json.loads(out.read_text())
+    assert doc["sentinel"] == 7
+    assert doc["other_bench"] == {"qps": 1.0}
+    assert doc["mixed"]["ratios"]["0.25"]["qps"] > 0

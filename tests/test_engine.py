@@ -197,3 +197,26 @@ def test_query_server_drains_priority_waves():
     for qid, r in zip(qids, rects):
         assert np.array_equal(results[qid], idx.query(r)), qid
     assert srv.stats()["queries"] == rects.shape[0]
+
+
+def test_query_server_mixed_clock_submit_ordering():
+    """Regression: ``submit`` used to default ``arrival`` to ``time.time()``
+    (epoch seconds, ~1.7e9) while explicit callers pass ``perf_counter``
+    stamps — the drain sort then compared the two clocks, so ANY explicit
+    arrival out-sorted every default one regardless of true order.  Both
+    must come from ``perf_counter`` now: FIFO order is submit order."""
+    import time
+
+    ds = make_airline(4_000, seed=2)
+    idx = COAXIndex(ds.data)
+    rects = rects_for(ds.data, n=3, seed=4)[:3]
+    srv = QueryServer(idx, max_batch=1)
+    qa = srv.submit(rects[0])                               # default stamp
+    qb = srv.submit(rects[1])                               # default stamp
+    qc = srv.submit(rects[2], arrival=time.perf_counter())  # explicit stamp
+    first = srv.drain(max_waves=1)
+    assert set(first) == {qa}, (
+        "explicit perf_counter arrival out-sorted earlier default submits")
+    second = srv.drain(max_waves=1)
+    assert set(second) == {qb}
+    assert set(srv.drain()) == {qc}

@@ -16,6 +16,8 @@ Registry
     generator producing fresh in-pattern rows for insert schedules.
 ``rects_for(data)``      — the standard rect mix: knn rects + full-range +
     far-out-of-range + point (empty-result) + half-open (±inf bounds).
+``zipf_rects(data)``     — Zipfian hot-rect mix (repeats + nested subsets)
+    for the §9 semantic-cache gate (DESIGN.md §9.2).
 ``violate_fd(ds, rows)`` — break the workload's first FD group on a copy
     (drives outlier-delta and drift paths).
 
@@ -89,6 +91,41 @@ def rects_for(data, n=24, seed=0, extremes=True, sample_cap=10_000):
     lop[0] = float(np.median(data[:, 0]))
     rects.append(np.stack([lop, np.full(d, np.inf)], axis=-1))  # half-open
     return np.stack(rects)
+
+
+def zipf_rects(data, n=256, n_hot=16, alpha=1.1, nest_frac=0.25, seed=0,
+               sample_cap=10_000):
+    """Zipfian hot-rect query mix — the §9 semantic-cache gate workload
+    (DESIGN.md §9.2; the ROADMAP cache item's Zipfian sweep).
+
+    Draws ``n`` rects from a pool of ``n_hot`` "hot" knn rects under a
+    Zipf(``alpha``) popularity law, so a small set of rects dominates the
+    stream the way skewed real query logs do (the Tsunami motivation).
+    Repeated draws are BIT-IDENTICAL to their pool rect — exact cache hits
+    — and a ``nest_frac`` fraction are re-drawn shrunk strictly inside
+    their hot rect (per-side shrink ≤ 30% of the width), exercising the
+    containment/partial-hit path.  Deterministic per ``seed``.
+    """
+    if n_hot < 1:
+        raise ValueError("n_hot must be >= 1")
+    rng = np.random.default_rng(seed)
+    pool = np.asarray(knn_rect_queries(data, n_hot, 64, seed=seed,
+                                       sample_cap=sample_cap), np.float64)
+    ranks = np.arange(1, n_hot + 1, dtype=np.float64)
+    w = ranks ** -float(alpha)
+    w /= w.sum()
+    picks = rng.choice(n_hot, size=n, p=w)
+    rects = pool[picks].copy()
+    nest = rng.random(n) < nest_frac
+    if nest.any():
+        sub = rects[nest]
+        width = sub[:, :, 1] - sub[:, :, 0]
+        lo_shrink = rng.uniform(0.0, 0.3, size=width.shape) * width
+        hi_shrink = rng.uniform(0.0, 0.3, size=width.shape) * width
+        sub[:, :, 0] = sub[:, :, 0] + lo_shrink
+        sub[:, :, 1] = np.maximum(sub[:, :, 1] - hi_shrink, sub[:, :, 0])
+        rects[nest] = sub
+    return rects
 
 
 def violate_fd(ds, rows):
