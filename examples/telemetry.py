@@ -1,0 +1,100 @@
+"""Telemetry plane walkthrough (DESIGN.md §10).
+
+    PYTHONPATH=src python examples/telemetry.py
+
+Serves a mixed read/write stream with background compaction while the
+full telemetry plane is on, then shows the three layers:
+
+1. the metrics registry — Prometheus-style text exposition plus the
+   per-stage latency breakdown (probe/search/filter/merge/delta scan)
+   the perf PRs steer by;
+2. span tracing — the wave timeline, exported as Chrome ``trace_event``
+   JSON that chrome://tracing or Perfetto opens directly;
+3. the serving-pause watchdog — wave-gap outliers attributed to the
+   background span (compaction install, WAL fsync) that overlapped them.
+"""
+import json
+import sys
+import tempfile
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+
+from repro import obs
+from repro.core import COAXIndex, CoaxConfig
+from repro.data import knn_rect_queries, make_airline
+from repro.engine import QueryServer
+
+
+def main():
+    ds = make_airline(60_000, seed=0)
+    rects = knn_rect_queries(ds.data, 256, 64, seed=1, sample_cap=50_000)
+
+    tracer = obs.enable_tracing(capacity=16384)   # spans no-op without this
+    idx = COAXIndex(ds.data, CoaxConfig(background_compact=True,
+                                        compact_min_delta=512,
+                                        compact_delta_frac=0.01,
+                                        compact_check_rows=64))
+    srv = QueryServer(idx, max_batch=64)
+
+    rng = np.random.default_rng(7)
+    for _ in range(3):                # enough writes to cross the compaction
+        for start in range(0, len(rects), 64):   # trigger at least once
+            srv.insert(ds.data[rng.integers(0, len(ds.data), 128)])
+            for r in rects[start:start + 64]:
+                srv.submit(r)
+            srv.drain()
+    idx.finish_handoff()
+
+    # -- layer 1: the registry ------------------------------------------ #
+    s = srv.stats()
+    print(f"served {s['queries']} queries in {s['waves_drained']} "
+          f"waves, epoch {idx.epoch}, "
+          f"{idx.background_compactions} background compaction(s)")
+    print("\nper-stage latency (coax_stage_seconds):")
+    hist = obs.stage_hist()
+    for series in obs.get_registry().snapshot()[
+            "coax_stage_seconds"]["series"]:
+        lab = series["labels"]
+        summ = hist.summary(**lab)
+        print(f"  {lab['stage']:>11}/{lab['backend']}: "
+              f"n={summ['count']:<4} p50={summ['p50']*1e6:8.1f}us "
+              f"p99={summ['p99']*1e6:8.1f}us total={summ['sum']*1e3:7.2f}ms")
+    exposition = obs.get_registry().render_text()
+    wal_lines = [l for l in exposition.splitlines()
+                 if l.startswith(("coax_compactions",
+                                  "coax_handoff_seconds_"))]
+    print("\nexposition excerpt (registry.render_text()):")
+    for line in wal_lines[:6]:
+        print(f"  {line}")
+
+    # -- layer 2: the trace --------------------------------------------- #
+    evs = tracer.events()
+    ok, problems = tracer.validate()
+    by_name = {}
+    for e in evs:
+        by_name.setdefault(e["name"], []).append(e)
+    print(f"\ntrace: {len(evs)} spans ({'valid' if ok else problems[:2]}), "
+          f"{tracer.dropped} evicted from the ring")
+    for name in sorted(by_name):
+        spans = by_name[name]
+        total = sum(e["t1"] - e["t0"] for e in spans)
+        print(f"  {name:<20} x{len(spans):<4} {total*1e3:8.2f}ms total")
+    out = Path(tempfile.gettempdir()) / "coax_trace.json"
+    out.write_text(json.dumps(tracer.to_chrome()))
+    print(f"chrome://tracing timeline written to {out}")
+
+    # -- layer 3: the watchdog ------------------------------------------ #
+    wd = srv.watchdog.describe()
+    print(f"\nwatchdog: {wd['pauses']} pause(s) over a "
+          f"{wd['median_gap_s']*1e3:.2f}ms median wave gap"
+          + (f", last culprit {wd['last_culprit']}"
+             if wd["last_culprit"] else ""))
+
+    obs.disable_tracing()
+
+
+if __name__ == "__main__":
+    main()

@@ -54,6 +54,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .. import obs
 from . import theory
 from .delta import DeltaPlane
 from .gridfile import BatchStats, GridFile, fit_cells_per_dim
@@ -554,9 +555,10 @@ class COAXIndex:
         old epoch keeps serving; writes admitted during the build land in
         its delta planes AND are recorded for the post-handoff tail replay.
         """
-        rows, ids = self.live_rows()           # the frozen build input
-        data = np.ascontiguousarray(rows, dtype=np.float32)
-        row_ids = np.asarray(ids, dtype=np.int64).copy()
+        with obs.span("compact.freeze", epoch=self.epoch):
+            rows, ids = self.live_rows()       # the frozen build input
+            data = np.ascontiguousarray(rows, dtype=np.float32)
+            row_ids = np.asarray(ids, dtype=np.int64).copy()
         if relearn is None:
             relearn = self.drift_predictability() < self.config.drift_threshold
         relearned = bool(relearn) and data.shape[0] >= 64
@@ -564,6 +566,11 @@ class COAXIndex:
         groups_in = list(self.groups)
         cfg = self.config
         result = [None]
+        # the build span is opened HERE (serving thread, implicit parent)
+        # and finished by the builder thread — the §10.2 cross-thread case
+        tr = obs.tracer()
+        bsp = tr.start("compact.build", rows=int(data.shape[0]),
+                       epoch=epoch, relearn=relearned) if tr else None
 
         def _build():
             try:
@@ -574,6 +581,9 @@ class COAXIndex:
                              relearned)
             except BaseException as e:         # surfaced at the next poll
                 result[0] = ("err", e)
+            finally:
+                if bsp is not None:
+                    tr.finish(bsp)
 
         self._handoff_ops = []
         self._handoff_result = result
@@ -613,7 +623,8 @@ class COAXIndex:
             raise RuntimeError("background compaction failed") from err
         _, fitted, relearned = status
         bk = self.backend
-        self._install_fit(fitted)      # atomic swap: new epoch serves next
+        with obs.span("compact.install", epoch=self.epoch + 1):
+            self._install_fit(fitted)  # atomic swap: new epoch serves next
         self.compactions += 1
         self.backend = bk
         self._last_compact_relearned = relearned
@@ -629,11 +640,12 @@ class COAXIndex:
         def _replay_tail():
             self._in_handoff_replay = True
             try:
-                for op in ops:
-                    if op[0] == "i":
-                        self.insert(op[1], ids=op[2])
-                    else:
-                        self.delete(op[1])
+                with obs.span("compact.tail_replay", ops=len(ops)):
+                    for op in ops:
+                        if op[0] == "i":
+                            self.insert(op[1], ids=op[2])
+                        else:
+                            self.delete(op[1])
             finally:
                 self._in_handoff_replay = False
 
@@ -643,6 +655,12 @@ class COAXIndex:
             _replay_tail()
         self.background_compactions += 1
         self.last_handoff_s = time.perf_counter() - self._handoff_t0
+        g = obs.get_registry()
+        g.counter("coax_compactions_total", "epoch rebuilds installed",
+                  ("mode",)).inc(mode="background")
+        g.histogram("coax_handoff_seconds",
+                    "background build start -> tail replayed").observe(
+                        self.last_handoff_s)
         return True
 
     def finish_handoff(self) -> bool:
@@ -682,18 +700,26 @@ class COAXIndex:
         self.poll_handoff(wait=True)   # fold an in-flight handoff first
         if relearn is None:
             relearn = self.drift_predictability() < self.config.drift_threshold
-        rows, ids = self.live_rows()
-        bk = self.backend
-        self.data = np.ascontiguousarray(rows, dtype=np.float32)
-        self.row_ids = np.asarray(ids, dtype=np.int64)
-        relearned = bool(relearn) and self.data.shape[0] >= 64
-        if relearned:
-            self.groups = learn_soft_fds(self.data, self.config.softfd)
-            self.keep_dims = reduced_dims(self.n_dims, self.groups)
-        self.epoch += 1
-        self.compactions += 1
-        self._fit()
-        self.backend = bk
+        t0 = time.perf_counter()
+        with obs.span("compact.sync", epoch=self.epoch + 1):
+            rows, ids = self.live_rows()
+            bk = self.backend
+            self.data = np.ascontiguousarray(rows, dtype=np.float32)
+            self.row_ids = np.asarray(ids, dtype=np.int64)
+            relearned = bool(relearn) and self.data.shape[0] >= 64
+            if relearned:
+                self.groups = learn_soft_fds(self.data, self.config.softfd)
+                self.keep_dims = reduced_dims(self.n_dims, self.groups)
+            self.epoch += 1
+            self.compactions += 1
+            self._fit()
+            self.backend = bk
+        g = obs.get_registry()
+        g.counter("coax_compactions_total", "epoch rebuilds installed",
+                  ("mode",)).inc(mode="sync")
+        g.histogram("coax_compact_sync_seconds",
+                    "stop-the-world rebuild time").observe(
+                        time.perf_counter() - t0)
         # what THIS compaction decided, for the rotation control frame a
         # replication hub ships (DESIGN.md §8.2) — a replica whose own
         # trigger did not fire replays the same decision verbatim
@@ -971,17 +997,18 @@ class COAXIndex:
                     order = np.lexsort((r_p, q_p))     # merge the two hit lists
                     q_p, r_p = q_p[order], r_p[order]
 
-        dead = self._dead_ids()
-        if dead.size and r_p.size:
-            keep = ~sorted_contains(dead, r_p)
-            q_p, r_p = q_p[keep], r_p[keep]
         q_d1, r_d1 = self.delta_primary.scan_batch(rects)
         q_d2, r_d2 = self.delta_outlier.scan_batch(rects)
-        if r_d1.size or r_d2.size:
-            q_p = np.concatenate([q_p, q_d1, q_d2])
-            r_p = np.concatenate([r_p, r_d1, r_d2])
-            order = np.lexsort((r_p, q_p))
-            q_p, r_p = q_p[order], r_p[order]
+        with obs.stage_timer("merge", self.backend):
+            dead = self._dead_ids()
+            if dead.size and r_p.size:
+                keep = ~sorted_contains(dead, r_p)
+                q_p, r_p = q_p[keep], r_p[keep]
+            if r_d1.size or r_d2.size:
+                q_p = np.concatenate([q_p, q_d1, q_d2])
+                r_p = np.concatenate([r_p, r_d1, r_d2])
+                order = np.lexsort((r_p, q_p))
+                q_p, r_p = q_p[order], r_p[order]
         # delta work actually done: run-window candidates + dense L0 rows
         # (was b * delta_rows before the §5.3 tiered runs)
         stats.rows_scanned += (self.delta_primary.last_scan_probed
@@ -1029,8 +1056,12 @@ class COAXIndex:
         submit time, §9.2)."""
         if self.cache is None:
             return None
-        version = self._cache_version()
-        answers, stats = self.cache.lookup_wave(version, rects)
+        with obs.span("cache.route", queries=int(rects.shape[0])) as sp:
+            with obs.stage_timer("cache_route", self.backend):
+                version = self._cache_version()
+                answers, stats = self.cache.lookup_wave(version, rects)
+            if sp is not None:
+                sp.args.update(hits=stats.hits, partial=stats.partial)
         self.last_cache_stats = stats
         miss = np.array([i for i, a in enumerate(answers) if a is None],
                         dtype=np.int64)
@@ -1045,8 +1076,12 @@ class COAXIndex:
         must not be stored under the new key)."""
         if self.cache is None or version != self._cache_version():
             return
-        for rect, ids in zip(rects, split_hits(qids, rids, rects.shape[0])):
-            self.cache.admit(version, rect, ids, self.rows_for_ids(ids))
+        with obs.span("cache.admit", queries=int(rects.shape[0])):
+            with obs.stage_timer("cache_admit", self.backend):
+                for rect, ids in zip(rects,
+                                     split_hits(qids, rids, rects.shape[0])):
+                    self.cache.admit(version, rect, ids,
+                                     self.rows_for_ids(ids))
 
     @staticmethod
     def _merge_cached(answers, miss, q_m, r_m):

@@ -57,10 +57,12 @@ the epoch's whole write history.
 """
 from __future__ import annotations
 
+import time
 from typing import List, Optional, Tuple
 
 import numpy as np
 
+from .. import obs
 from .types import Rect, rect_contains, sorted_contains
 
 __all__ = ["DeltaPlane", "FrozenDelta"]
@@ -307,12 +309,26 @@ class DeltaPlane:
         against the f32 log rows are exact after upcast).  The L0 tail
         (< ``l0_spill`` rows) is scanned densely.  Pair order is arbitrary;
         callers lexsort the merged hit list.
+
+        Telemetry (DESIGN.md §10): wall time folds into
+        ``coax_stage_seconds{stage="delta_scan"}``; with tracing enabled
+        each call is one ``delta.scan`` span under its wave.
         """
         rects = np.asarray(rects, dtype=np.float64)
         b = rects.shape[0]
         self.last_scan_probed = 0
         if b == 0 or self.n_live == 0:
             return np.empty(0, np.int64), np.empty(0, np.int64)
+        t_start = time.perf_counter()
+        try:
+            with obs.span("delta.scan", queries=b, live=self.n_live):
+                return self._scan_batch_inner(rects, b)
+        finally:
+            obs.stage_hist().observe(time.perf_counter() - t_start,
+                                     stage="delta_scan", backend="numpy")
+
+    def _scan_batch_inner(self, rects: np.ndarray, b: int
+                          ) -> Tuple[np.ndarray, np.ndarray]:
         rows64 = self._log_rows64()
         alive = self._alive_mask()
         k = self.key_dim

@@ -20,6 +20,7 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .. import obs
 from .types import Rect, rect_contains
 
 __all__ = ["GridFile", "BatchStats", "gather_ranges", "fit_cells_per_dim",
@@ -537,49 +538,57 @@ class GridFile:
         fallbacks: int = 0,
     ) -> Tuple[np.ndarray, np.ndarray]:
         """The exact host implementation of ``query_batch`` (and the device
-        backend's overflow fallback / correctness oracle)."""
+        backend's overflow fallback / correctness oracle).
+
+        Telemetry (DESIGN.md §10.1): each pipeline stage — directory
+        *probe*, in-cell segment *search*, exact row *filter* — folds its
+        wall time into ``coax_stage_seconds{stage,backend="numpy"}``, the
+        per-stage breakdown ``bench_queries.py --telemetry`` reports."""
         stats = BatchStats(queries=int(nav_rects.shape[0]),
                            backend="numpy", fallbacks=fallbacks)
         self.last_batch_stats = stats
-        qids, cells = self.plan_batch(nav_rects)
+        with obs.stage_timer("probe"):
+            qids, cells = self.plan_batch(nav_rects)
         stats.cells_probed = int(cells.size)
         if cells.size == 0:
             return np.empty(0, np.int64), np.empty(0, np.int64)
 
-        blk_lo = self.offsets[cells]
-        blk_hi = self.offsets[cells + 1]
-        if self.sort_dim is not None and self.n_rows:
-            pos = self.index_dims.index(self.sort_dim)
-            q_lo = nav_rects[qids, pos, 0]              # per-(query,cell) targets
-            q_hi = nav_rects[qids, pos, 1]
-            sv = self.sort_vals
-            blk_lo = batched_searchsorted(sv, blk_lo, blk_hi, q_lo, "left",
-                                          vals_finite=self._sort_finite)
-            blk_hi = batched_searchsorted(sv, blk_lo, blk_hi, q_hi, "left",
-                                          vals_finite=self._sort_finite)
+        with obs.stage_timer("search"):
+            blk_lo = self.offsets[cells]
+            blk_hi = self.offsets[cells + 1]
+            if self.sort_dim is not None and self.n_rows:
+                pos = self.index_dims.index(self.sort_dim)
+                q_lo = nav_rects[qids, pos, 0]          # per-(query,cell) targets
+                q_hi = nav_rects[qids, pos, 1]
+                sv = self.sort_vals
+                blk_lo = batched_searchsorted(sv, blk_lo, blk_hi, q_lo, "left",
+                                              vals_finite=self._sort_finite)
+                blk_hi = batched_searchsorted(sv, blk_lo, blk_hi, q_hi, "left",
+                                              vals_finite=self._sort_finite)
 
-        lens = np.maximum(blk_hi - blk_lo, 0)
-        idx = gather_ranges(blk_lo, blk_hi, lens)       # one (query,cell) pass
-        stats.rows_scanned = int(idx.size)
-        if idx.size == 0:
-            return np.empty(0, np.int64), np.empty(0, np.int64)
-        row_q = np.repeat(qids, lens)                   # owning query per row
-        rows = self.rows[idx]                           # (T, D) one f32 gather
+        with obs.stage_timer("filter"):
+            lens = np.maximum(blk_hi - blk_lo, 0)
+            idx = gather_ranges(blk_lo, blk_hi, lens)   # one (query,cell) pass
+            stats.rows_scanned = int(idx.size)
+            if idx.size == 0:
+                return np.empty(0, np.int64), np.empty(0, np.int64)
+            row_q = np.repeat(qids, lens)               # owning query per row
+            rows = self.rows[idx]                       # (T, D) one f32 gather
 
-        # Row filter in float32 with ceil-rounded bounds (exact: see
-        # ``f32_ceil``), one dim at a time so temporaries stay (T,)-sized —
-        # float64 (T, D) broadcasts are the batch path's cache killer.
-        lo32 = f32_ceil(filter_rects[:, :, 0])          # (B, D)
-        hi32 = f32_ceil(filter_rects[:, :, 1])
-        hit = np.ones(idx.size, dtype=bool)
-        for j in range(self.d_full):
-            if self._rows_finite and np.isneginf(lo32[:, j]).all() \
-                    and np.isposinf(hi32[:, j]).all():
-                continue                                # dim unconstrained
-            v = rows[:, j]
-            np.logical_and(hit, v >= lo32[row_q, j], out=hit)
-            np.logical_and(hit, v < hi32[row_q, j], out=hit)
-        out_q = row_q[hit]
-        out_r = self.row_ids[idx[hit]]
-        order = np.lexsort((out_r, out_q))
-        return out_q[order], out_r[order]
+            # Row filter in float32 with ceil-rounded bounds (exact: see
+            # ``f32_ceil``), one dim at a time so temporaries stay (T,)-sized —
+            # float64 (T, D) broadcasts are the batch path's cache killer.
+            lo32 = f32_ceil(filter_rects[:, :, 0])      # (B, D)
+            hi32 = f32_ceil(filter_rects[:, :, 1])
+            hit = np.ones(idx.size, dtype=bool)
+            for j in range(self.d_full):
+                if self._rows_finite and np.isneginf(lo32[:, j]).all() \
+                        and np.isposinf(hi32[:, j]).all():
+                    continue                            # dim unconstrained
+                v = rows[:, j]
+                np.logical_and(hit, v >= lo32[row_q, j], out=hit)
+                np.logical_and(hit, v < hi32[row_q, j], out=hit)
+            out_q = row_q[hit]
+            out_r = self.row_ids[idx[hit]]
+            order = np.lexsort((out_r, out_q))
+            return out_q[order], out_r[order]

@@ -44,6 +44,7 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
+from .. import obs
 from ..core.translate import translate_rects
 from ..core.types import rect_contains, sorted_contains, split_hits
 
@@ -156,6 +157,8 @@ class SemanticCache:
         _, e = self._entries.popitem(last=False)
         self._nbytes -= e.nbytes
         self.evictions += 1
+        obs.get_registry().counter(
+            "coax_cache_evictions_total", "LRU evictions.").inc()
         self._stack = None
 
     # ------------------------------------------------------------------ #
@@ -203,6 +206,16 @@ class SemanticCache:
         self.hits += hits
         self.partial += partial
         self.misses += misses
+        # one registry touch per wave (not per rect): §10 overhead budget
+        c = obs.get_registry().counter(
+            "coax_cache_lookups_total", "Cache lookup outcomes per rect.",
+            ("outcome",))
+        if hits:
+            c.inc(hits, outcome="hit")
+        if partial:
+            c.inc(partial, outcome="partial")
+        if misses:
+            c.inc(misses, outcome="miss")
         return answers, CacheLookup(queries=b, hits=hits, partial=partial,
                                     misses=misses, bytes=self._nbytes)
 
@@ -228,6 +241,8 @@ class SemanticCache:
         self._entries[key] = _Entry(rect, ids, rows64, nbytes)
         self._nbytes += nbytes
         self.admissions += 1
+        obs.get_registry().counter(
+            "coax_cache_admissions_total", "Entries admitted.").inc()
         self._stack = None
         while (self._nbytes > self.byte_budget
                or len(self._entries) > self.max_entries):

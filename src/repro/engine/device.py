@@ -63,10 +63,12 @@ keep draining against the frozen images they captured.
 from __future__ import annotations
 
 import functools
+import time
 from typing import Optional, Tuple
 
 import numpy as np
 
+from .. import obs
 from ..core.gridfile import BatchStats, f32_ceil
 from ..core.types import sorted_contains
 
@@ -394,23 +396,66 @@ class _PlanBase:
     def bucket(self, b: int) -> int:
         return max(self.min_bucket, _next_pow2(b))
 
+    def _count_h2d(self, nbytes: int) -> None:
+        """Fold an upload into the plan counter AND the global registry
+        (``coax_device_bytes{direction="h2d"}``, DESIGN.md §10.1).
+        ``adopt`` bypasses this: carried bytes were already counted."""
+        self.bytes_h2d += nbytes
+        obs.get_registry().counter(
+            "coax_device_bytes", "bytes moved across the PCIe/ICI boundary",
+            ("direction",)).inc(nbytes, direction="h2d")
+
     def _dispatch(self, segs, config):
-        res = self._fn(tuple(segs), tuple(config))
+        """One jitted wave-program launch.  Telemetry (DESIGN.md §10): the
+        ``device.dispatch`` span splits compile from execute — a jit-cache
+        miss on this call stamps ``compiled=True`` (and the span's whole
+        duration is dominated by XLA compilation; steady-state waves re-
+        enter compiled executables and the span is launch cost only).
+        Launch count and any compile fold into the global registry."""
+        before = self.compile_count
+        t0 = time.perf_counter()
+        with obs.span("device.dispatch", segs=len(segs)) as sp:
+            res = self._fn(tuple(segs), tuple(config))
+        compiled = self.compile_count - before
+        if sp is not None and compiled:
+            sp.args["compiled"] = True
         self.dispatch_count += 1
+        g = obs.get_registry()
+        g.counter("coax_device_dispatch_total",
+                  "jitted wave-program launches").inc()
+        if compiled:
+            g.counter("coax_device_compile_total",
+                      "jit cache misses (new wave shapes)").inc(compiled)
+        obs.stage_hist().observe(time.perf_counter() - t0,
+                                 stage="dispatch", backend="device")
         return res
 
     def _drain(self, res, bs):
         """Drain point: block, transfer the compacted buffers, count bytes.
         ``bs`` is the real (un-padded) query count per segment.  Returns
-        per-segment ``(counts (b,), hits (bp, W), scanned (b,))``."""
-        res = jax.block_until_ready(res)
-        out = []
-        for (counts, hits, scanned), b in zip(res, bs):
-            counts = np.asarray(counts)[:b, 0]
-            hits = np.asarray(hits)
-            scanned = np.asarray(scanned)[:b, 0]
-            self.bytes_d2h += counts.nbytes + hits.nbytes + scanned.nbytes
-            out.append((counts, hits, scanned))
+        per-segment ``(counts (b,), hits (bp, W), scanned (b,))``.  The
+        ``device.transfer`` span covers the ``block_until_ready`` fence
+        plus the d2h copies — execute+transfer time, distinct from the
+        dispatch span's compile+launch (DESIGN.md §10.2)."""
+        t0 = time.perf_counter()
+        d2h = 0
+        with obs.span("device.transfer") as sp:
+            res = jax.block_until_ready(res)
+            out = []
+            for (counts, hits, scanned), b in zip(res, bs):
+                counts = np.asarray(counts)[:b, 0]
+                hits = np.asarray(hits)
+                scanned = np.asarray(scanned)[:b, 0]
+                d2h += counts.nbytes + hits.nbytes + scanned.nbytes
+                out.append((counts, hits, scanned))
+            if sp is not None:
+                sp.args["bytes_d2h"] = d2h
+        self.bytes_d2h += d2h
+        obs.get_registry().counter(
+            "coax_device_bytes", "bytes moved across the PCIe/ICI boundary",
+            ("direction",)).inc(d2h, direction="d2h")
+        obs.stage_hist().observe(time.perf_counter() - t0,
+                                 stage="transfer", backend="device")
         return out
 
 
@@ -446,7 +491,7 @@ class DevicePlan(_PlanBase):
         self.n_rows = grid.n_rows
         self._img = _GridImage(grid, self.tile) if grid.n_rows else None
         if self._img is not None:
-            self.bytes_h2d += self._img.bytes_resident
+            self._count_h2d(self._img.bytes_resident)
 
     # ------------------------------------------------------------------ #
     def plan_counts(self, nav_rects: np.ndarray,
@@ -481,7 +526,7 @@ class DevicePlan(_PlanBase):
         cfg = self._img.config_for(self.hit_cap, self.use_pallas,
                                    self.interpret, gw)
         res = self._dispatch([seg], [cfg])
-        self.bytes_h2d += nbytes
+        self._count_h2d(nbytes)
         return {"b": b, "res": res, "cells": int(n_cells_q.sum()),
                 "nav": nav_rects, "filt": filter_rects}
 
@@ -554,7 +599,7 @@ class CoaxDevicePlan(_PlanBase):
                       if self.outlier.n_rows else None)
         for img in (self.p_img, self.o_img):
             if img is not None:
-                self.bytes_h2d += img.bytes_resident
+                self._count_h2d(img.bytes_resident)
         self._dead_key = None
         self._dead_host = np.empty(0, np.int64)
         self._delta_key = None
@@ -570,7 +615,7 @@ class CoaxDevicePlan(_PlanBase):
             self._dead_host = self.index._dead_ids()
             for img in (self.p_img, self.o_img):
                 if img is not None:
-                    self.bytes_h2d += img.set_alive(self._dead_host)
+                    self._count_h2d(img.set_alive(self._dead_host))
             self._dead_key = dead_key
         delta_key = (dp.n_log, dp.n_log_dead, do.n_log, do.n_log_dead)
         if delta_key != self._delta_key:
@@ -588,7 +633,7 @@ class CoaxDevicePlan(_PlanBase):
                 self._delta = {"rows_t": jnp.asarray(rows_t),
                                "alive": jnp.asarray(alive),
                                "rows": rows, "ids": ids, "m_pad": m_pad}
-                self.bytes_h2d += rows_t.size * 4 + alive.size * 4
+                self._count_h2d(rows_t.size * 4 + alive.size * 4)
             else:
                 self._delta = None
             self._delta_key = delta_key
@@ -711,7 +756,7 @@ class CoaxDevicePlan(_PlanBase):
             nbytes += flo.size * 8
 
         res = self._dispatch(segs, cfgs) if segs else ()
-        self.bytes_h2d += nbytes
+        self._count_h2d(nbytes)
         return {"b": b, "res": res, "ids": ids_list, "cells": cells_probed,
                 "qmaps": out["qmaps"], "bs": out["bs"],
                 "nav": nav_rects, "rects": rects, "touch": touch,

@@ -20,6 +20,18 @@ submit→drain latency of that wave (the p50/p99 the benchmark reports)
 while ``stats()['total_s']`` counts non-overlapping wall-clock, so QPS
 reflects the pipelining win instead of double-counting overlap.
 
+Telemetry (DESIGN.md §10): per-wave rollups land in a per-executor
+``MetricsRegistry`` — the ONE source of truth ``stats()`` reads from in
+O(1), replacing the old re-reduce over the whole wave list — and are
+mirrored into the process-global registry (`coax_waves_total`,
+`coax_queries_total`, `coax_wave_seconds{backend}`) for exposition.  The
+retained per-wave rows live in a bounded ring (``wave_history``, default
+1024): a long-running server keeps the trailing window for debugging
+while the aggregates stay exact over the full run.  With tracing enabled
+each wave is one ``wave`` span covering submit→drain; drain-side work
+re-attaches wave *k*'s span explicitly so the pipelined wave *k+1* on
+the stack never adopts its children (§10.2).
+
 Under the mutable lifecycle (DESIGN.md §5) the index may compact between
 waves — the executor re-validates ``index.backend`` per wave and stamps
 each ``WaveStats`` with the epoch/delta/tombstone state it was SUBMITTED
@@ -37,11 +49,15 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .. import obs
 from ..core.types import split_hits
+from ..obs.metrics import MetricsRegistry
 
 __all__ = ["BatchQueryExecutor", "WaveStats", "split_hits"]
 
 PIPELINE_DEPTH = 2     # waves in flight: upload i+1 while i's kernel runs
+
+WAVE_HISTORY = 1024    # per-wave rows retained (ring); aggregates are exact
 
 
 @dataclasses.dataclass
@@ -91,14 +107,21 @@ class BatchQueryExecutor:
     cache_bytes : byte budget for a §9 semantic result cache attached to
         the index (``attach_cache``); ``None`` leaves caching off.  Hit
         rollups land in ``WaveStats``/``stats()``.
+    wave_history : per-wave ``WaveStats`` rows retained in the bounded
+        ring behind the ``wave_stats`` property (§10.4 satellite — the
+        old unbounded list grew O(waves) on a long-running server).
+        Aggregates in ``stats()`` stay exact regardless of eviction.
     """
 
     def __init__(self, index, max_batch: int = 64,
                  backend: Optional[str] = None,
                  shards: Optional[int] = None,
-                 cache_bytes: Optional[int] = None):
+                 cache_bytes: Optional[int] = None,
+                 wave_history: int = WAVE_HISTORY):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
+        if wave_history < 1:
+            raise ValueError("wave_history must be >= 1")
         if shards is not None:
             n = getattr(index, "n_shards", None)
             if n is not None:
@@ -113,10 +136,8 @@ class BatchQueryExecutor:
                     f"{type(index).__name__} cannot be sharded")
         self.index = index
         self.max_batch = max_batch
-        self.wave_stats: List[WaveStats] = []
+        self.wave_history = int(wave_history)
         self._batched = hasattr(index, "query_batch")
-        self._wall_s = 0.0       # non-overlapping busy time (pipelined QPS)
-        self._last_done = 0.0    # perf_counter stamp of the last drain
         self._requested_backend = backend
         if backend is not None:
             if hasattr(index, "backend"):
@@ -130,6 +151,51 @@ class BatchQueryExecutor:
                 raise ValueError(
                     f"{type(self.index).__name__} has no attach_cache")
             attach(byte_budget=int(cache_bytes))
+        self.reset_stats()
+
+    def reset_stats(self) -> None:
+        """Fresh ring + fresh per-executor registry (the global-registry
+        mirror is monotonic and NOT reset — process counters never go
+        backwards)."""
+        self._ring: deque = deque(maxlen=self.wave_history)
+        self._wave_seq = 0       # waves ever run (ring may hold fewer)
+        self._wall_s = 0.0       # non-overlapping busy time (pipelined QPS)
+        self._last_done = 0.0    # perf_counter stamp of the last drain
+        self._epochs: set = set()
+        m = self.metrics = MetricsRegistry()
+        self._c_queries = m.counter("queries", "queries answered")
+        self._c_hits = m.counter("hits", "hit rows returned")
+        self._c_rows = m.counter("rows_scanned", "planning-stage rows")
+        self._c_cells = m.counter("cells_probed", "candidate (q,cell) pairs")
+        self._c_fallbacks = m.counter("device_fallbacks",
+                                      "device waves re-answered on host")
+        self._c_fb_waves = m.counter("fallback_waves",
+                                     "waves with >=1 fallback")
+        self._c_overflows = m.counter("hit_overflows",
+                                      "per-query device hit-buffer overflows")
+        self._c_cache_hits = m.counter("cache_hits", "exact cache answers")
+        self._c_cache_partial = m.counter("cache_partial",
+                                          "containment cache answers")
+        self._h_wave = m.histogram("wave_seconds", "submit->drain latency",
+                                   ("backend",))
+        self._g_cache_bytes = m.gauge("cache_bytes", "cache residency")
+        self._g_delta = m.gauge("delta_rows", "live delta rows at last wave")
+        self._g_tomb = m.gauge("tombstones", "tombstones at last wave")
+        self._c_shard = m.counter("shard_queries", "queries per shard",
+                                  ("shard",))
+        self._c_shard_rows = m.counter("shard_rows_scanned",
+                                       "rows per shard", ("shard",))
+        self._c_shard_cells = m.counter("shard_cells_probed",
+                                        "cells per shard", ("shard",))
+        self._c_shard_fb = m.counter("shard_fallbacks",
+                                     "fallbacks per shard", ("shard",))
+
+    @property
+    def wave_stats(self) -> List[WaveStats]:
+        """Trailing window of per-wave rows (bounded ring, §10.4).  Sums
+        over it equal ``stats()`` totals only while nothing has been
+        evicted (``stats()['waves'] <= wave_history``)."""
+        return list(self._ring)
 
     @property
     def backend(self) -> str:
@@ -180,12 +246,13 @@ class BatchQueryExecutor:
 
     def _record_wave(self, wave: np.ndarray, qids: np.ndarray,
                      rids: np.ndarray, t0: float,
-                     meta: Tuple[int, int, int, Tuple[int, int, int]]
+                     meta: Tuple[int, int, int, Tuple[int, int, int]],
                      ) -> List[np.ndarray]:
         """Shared drain-side bookkeeping: wall-clock accounting, per-wave
-        stats row, hit splitting.  ``latency_s`` is submit→drain; the busy
-        accumulator only charges time not already charged to an overlapping
-        wave, so pipelined QPS is wall-clock-true."""
+        stats row (ring), registry aggregates, hit splitting.
+        ``latency_s`` is submit→drain; the busy accumulator only charges
+        time not already charged to an overlapping wave, so pipelined QPS
+        is wall-clock-true."""
         done = time.perf_counter()
         self._wall_s += done - max(t0, self._last_done)
         self._last_done = done
@@ -196,8 +263,8 @@ class BatchQueryExecutor:
         shard_stats = tuple(
             (s.queries, s.rows_scanned, s.cells_probed, s.fallbacks)
             for s in ss) if ss is not None else ()
-        self.wave_stats.append(WaveStats(
-            len(self.wave_stats), int(wave.shape[0]), int(rids.size),
+        ws = WaveStats(
+            self._wave_seq, int(wave.shape[0]), int(rids.size),
             done - t0,
             rows_scanned=bs.rows_scanned if bs else 0,
             cells_probed=bs.cells_probed if bs else 0,
@@ -208,7 +275,45 @@ class BatchQueryExecutor:
             shards_hit=sum(1 for s in shard_stats if s[0] > 0),
             shard_stats=shard_stats,
             cache_hits=meta[3][0], cache_partial=meta[3][1],
-            cache_bytes=meta[3][2]))
+            cache_bytes=meta[3][2])
+        self._wave_seq += 1
+        self._ring.append(ws)
+        # -- registry aggregates (stats() reads these in O(1), §10.1) -- #
+        self._c_queries.inc(ws.n_queries)
+        self._c_hits.inc(ws.n_hits)
+        self._c_rows.inc(ws.rows_scanned)
+        self._c_cells.inc(ws.cells_probed)
+        if ws.fallbacks:
+            self._c_fallbacks.inc(ws.fallbacks)
+            self._c_fb_waves.inc()
+        if ws.hit_overflows:
+            self._c_overflows.inc(ws.hit_overflows)
+        if ws.cache_hits:
+            self._c_cache_hits.inc(ws.cache_hits)
+        if ws.cache_partial:
+            self._c_cache_partial.inc(ws.cache_partial)
+        self._h_wave.observe(ws.latency_s, backend=ws.backend)
+        self._g_cache_bytes.set(ws.cache_bytes)
+        self._g_delta.set(ws.delta_rows)
+        self._g_tomb.set(ws.tombstones)
+        self._epochs.add(ws.epoch)
+        for k, s in enumerate(shard_stats):
+            if s[0]:
+                self._c_shard.inc(s[0], shard=k)
+            if s[1]:
+                self._c_shard_rows.inc(s[1], shard=k)
+            if s[2]:
+                self._c_shard_cells.inc(s[2], shard=k)
+            if s[3]:
+                self._c_shard_fb.inc(s[3], shard=k)
+        # process-global mirror (exposition; DESIGN.md §10.1)
+        g = obs.get_registry()
+        g.counter("coax_waves_total", "waves served",
+                  ("backend",)).inc(backend=ws.backend)
+        g.counter("coax_queries_total", "queries served",
+                  ("backend",)).inc(ws.n_queries, backend=ws.backend)
+        g.histogram("coax_wave_seconds", "wave submit->drain latency",
+                    ("backend",)).observe(ws.latency_s, backend=ws.backend)
         return split_hits(qids, rids, wave.shape[0])
 
     # -- split wave API (device pipelining; DESIGN.md §4) -------------- #
@@ -225,14 +330,30 @@ class BatchQueryExecutor:
             return None
         wave = np.asarray(rects, dtype=np.float64)
         self._revalidate_backend()
+        tr = obs.tracer()
+        wsp = tr.start("wave", queries=int(wave.shape[0]),
+                       backend="device") if tr else None
         t0 = time.perf_counter()
-        handle = self.index.query_batch_submit(wave)
-        return (wave, handle, t0, self._wave_meta())
+        if wsp is not None:
+            with tr.attach(wsp):       # dispatch/cache spans nest under it
+                handle = self.index.query_batch_submit(wave)
+        else:
+            handle = self.index.query_batch_submit(wave)
+        return (wave, handle, t0, self._wave_meta(), wsp)
 
     def execute_collect(self, pending) -> List[np.ndarray]:
         """Drain one ``execute_submit`` wave; returns one sorted row-id
-        array per rect (same contract as ``execute``)."""
-        wave, handle, t0, meta = pending
+        array per rect (same contract as ``execute``).  Drain-side spans
+        re-attach THIS wave's span (explicit parent), not whatever wave
+        is currently on the submit stack (§10.2)."""
+        wave, handle, t0, meta, wsp = pending
+        tr = obs.tracer()
+        if wsp is not None and tr is not None:
+            with tr.attach(wsp):
+                qids, rids = self.index.query_batch_collect(handle)
+            out = self._record_wave(wave, qids, rids, t0, meta)
+            tr.finish(wsp, hits=int(rids.size))
+            return out
         qids, rids = self.index.query_batch_collect(handle)
         return self._record_wave(wave, qids, rids, t0, meta)
 
@@ -258,65 +379,65 @@ class BatchQueryExecutor:
             while inflight:                    # backend flipped mid-stream
                 out.extend(self.execute_collect(inflight.popleft()))
             self._revalidate_backend()
+            tr = obs.tracer()
+            wsp = tr.start("wave", queries=int(wave.shape[0]),
+                           backend=self.backend) if tr else None
             t0 = time.perf_counter()
-            qids, rids = self._run_wave(wave)
+            if wsp is not None:
+                with tr.attach(wsp):
+                    qids, rids = self._run_wave(wave)
+            else:
+                qids, rids = self._run_wave(wave)
             out.extend(self._record_wave(wave, qids, rids, t0,
                                          self._wave_meta()))
+            if wsp is not None:
+                tr.finish(wsp, hits=int(rids.size))
         while inflight:
             out.extend(self.execute_collect(inflight.popleft()))
         return out
 
     # ------------------------------------------------------------------ #
     def stats(self) -> dict:
-        total_q = sum(w.n_queries for w in self.wave_stats)
-        # non-overlapping busy time; equals sum of latencies when waves are
-        # serial, strictly less when the device pipeline overlapped them
-        total_s = self._wall_s
-        lat_ms = np.array([w.latency_s * 1e3 for w in self.wave_stats])
+        """O(1) rollup read from the per-executor registry (§10.1) — the
+        old implementation re-reduced the whole ``wave_stats`` list on
+        every call, O(waves) on the serving path."""
+        total_q = int(self._c_queries.total())
+        total_s = self._wall_s      # non-overlapping busy time; < sum of
+        lat = self._h_wave          # latencies when the pipeline overlapped
         n_shards = int(getattr(self.index, "n_shards", 0))
-        per_shard = []
-        if n_shards:
-            acc = np.zeros((n_shards, 4), dtype=np.int64)
-            for w in self.wave_stats:
-                for k, s in enumerate(w.shard_stats):
-                    acc[k] += s
-            per_shard = [
-                {"queries": int(a[0]), "rows_scanned": int(a[1]),
-                 "cells_probed": int(a[2]), "fallbacks": int(a[3])}
-                for a in acc]
-        cache_hits = sum(w.cache_hits for w in self.wave_stats)
-        cache_partial = sum(w.cache_partial for w in self.wave_stats)
+        per_shard = [
+            {"queries": int(self._c_shard.value(shard=k)),
+             "rows_scanned": int(self._c_shard_rows.value(shard=k)),
+             "cells_probed": int(self._c_shard_cells.value(shard=k)),
+             "fallbacks": int(self._c_shard_fb.value(shard=k))}
+            for k in range(n_shards)]
+        cache_hits = int(self._c_cache_hits.total())
+        cache_partial = int(self._c_cache_partial.total())
         return {
             "shards": n_shards,
             "per_shard": per_shard,
-            "waves": len(self.wave_stats),
+            "waves": self._wave_seq,
             "queries": total_q,
             "cache_hits": cache_hits,
             "cache_partial": cache_partial,
             "cache_hit_rate": ((cache_hits + cache_partial) / total_q
                                if total_q else 0.0),
-            "cache_bytes": (self.wave_stats[-1].cache_bytes
-                            if self.wave_stats else 0),
-            "hits": sum(w.n_hits for w in self.wave_stats),
-            "rows_scanned": sum(w.rows_scanned for w in self.wave_stats),
-            "cells_probed": sum(w.cells_probed for w in self.wave_stats),
-            "device_fallbacks": sum(w.fallbacks for w in self.wave_stats),
-            "fallback_waves": sum(1 for w in self.wave_stats if w.fallbacks),
-            "hit_overflows": sum(w.hit_overflows for w in self.wave_stats),
+            "cache_bytes": int(self._g_cache_bytes.value()),
+            "hits": int(self._c_hits.total()),
+            "rows_scanned": int(self._c_rows.total()),
+            "cells_probed": int(self._c_cells.total()),
+            "device_fallbacks": int(self._c_fallbacks.total()),
+            "fallback_waves": int(self._c_fb_waves.total()),
+            "hit_overflows": int(self._c_overflows.total()),
             "total_s": total_s,
             "qps": total_q / total_s if total_s > 0 else 0.0,
-            "wave_p50_ms": float(np.percentile(lat_ms, 50)) if lat_ms.size else 0.0,
-            "wave_p99_ms": float(np.percentile(lat_ms, 99)) if lat_ms.size else 0.0,
+            "wave_p50_ms": lat.quantile(0.5) * 1e3,
+            "wave_p99_ms": lat.quantile(0.99) * 1e3,
             "batched": self._batched,
             "backend": self.backend,
-            "epochs": sorted({w.epoch for w in self.wave_stats}),
-            "delta_rows": self.wave_stats[-1].delta_rows if self.wave_stats
+            "epochs": sorted(self._epochs),
+            "delta_rows": int(self._g_delta.value()) if self._wave_seq
                           else int(getattr(self.index, "delta_rows", 0)),
-            "tombstones": self.wave_stats[-1].tombstones if self.wave_stats
+            "tombstones": int(self._g_tomb.value()) if self._wave_seq
                           else int(getattr(self.index, "tombstone_count", 0)),
         }
-
-    def reset_stats(self) -> None:
-        self.wave_stats = []
-        self._wall_s = 0.0
-        self._last_done = 0.0

@@ -30,6 +30,8 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from .. import obs
+from ..obs.watchdog import PauseWatchdog
 from .executor import BatchQueryExecutor
 
 __all__ = ["PendingQuery", "QueryServer"]
@@ -67,6 +69,12 @@ class QueryServer:
         in-flight wave, stops forming new ones, and returns — the caller
         then runs ``close()`` (flush queued writes, fsync the WAL, release
         the handle) and exits cleanly instead of dying mid-wave.
+    watchdog : serving-pause monitor (DESIGN.md §10.3) fed one tick per
+        completed wave; pauses exceeding N× the trailing median gap raise
+        ``serving_pause_total{culprit=...}`` with the responsible
+        background span attached.  Defaults to an always-on
+        ``obs.PauseWatchdog()``; pass your own to tune factor/callback,
+        or ``watchdog=None`` after construction to disable.
     """
 
     def __init__(self, index, max_batch: int = 64,
@@ -75,12 +83,14 @@ class QueryServer:
                  shards: Optional[int] = None,
                  checkpoint_every: Optional[int] = None,
                  cache_bytes: Optional[int] = None,
-                 shutdown=None):
+                 shutdown=None,
+                 watchdog: Optional[PauseWatchdog] = None):
         self.executor = executor or BatchQueryExecutor(
             index, max_batch=max_batch, backend=backend, shards=shards,
             cache_bytes=cache_bytes)
         self.checkpoint_every = checkpoint_every
         self.shutdown = shutdown
+        self.watchdog = watchdog if watchdog is not None else PauseWatchdog()
         self.closed = False
         self._pending: Dict[int, PendingQuery] = {}
         self._ids = itertools.count()
@@ -228,6 +238,8 @@ class QueryServer:
         for q, ans in zip(wave, answers):
             results[q.qid] = ans
         self.waves_drained += 1
+        if self.watchdog is not None:
+            self.watchdog.wave_done()          # §10.3 pause detection
         if (dur is not None and self.checkpoint_every
                 and self.waves_drained % self.checkpoint_every == 0):
             dur.checkpoint()
@@ -250,7 +262,15 @@ class QueryServer:
         overlaps wave ``i``'s kernel.  Snapshot semantics survive the
         overlap because the device plan captures epoch/delta/tombstone
         state at SUBMIT, before the next boundary's writes are flushed.
+
+        With tracing enabled (``obs.enable_tracing``) the whole call is
+        one ``server.drain`` span parenting every ``wave`` span the
+        executor opens (DESIGN.md §10.2).
         """
+        with obs.span("server.drain", pending=len(self._pending)):
+            return self._drain(max_waves)
+
+    def _drain(self, max_waves: Optional[int] = None) -> Dict[int, np.ndarray]:
         results: Dict[int, np.ndarray] = {}
         width = self.executor.max_batch
         waves_this_call = 0
@@ -339,6 +359,11 @@ class QueryServer:
             shutdown_requested=self.shutdown_requested,
             closed=self.closed,
         )
+        if self.watchdog is not None:
+            w = self.watchdog.describe()
+            s.update(pauses=w["pauses"],
+                     pause_median_gap_s=w["median_gap_s"],
+                     last_pause_culprit=w["last_culprit"])
         dur = getattr(index, "durable", None)
         if dur is not None:
             d = dur.describe()

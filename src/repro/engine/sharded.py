@@ -30,6 +30,7 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .. import obs
 from ..core import COAXIndex, CoaxConfig
 from ..core.gridfile import BatchStats
 from ..core.types import Rect, split_hits
@@ -453,22 +454,37 @@ class ShardedCOAX:
         r_parts: List[np.ndarray] = []
         merged = BatchStats(queries=b, backend=self.backend)
         cache_stats = None
-        for k in range(self.n_shards):
-            if not touch[k].any():
-                continue
-            sub = rects[touch[k]]
-            q_k, r_k = self.shards[k].query_batch(sub)
-            stats_k = dataclasses.replace(self.shards[k].last_batch_stats,
-                                          queries=int(touch[k].sum()))
-            self.last_shard_stats[k] = stats_k
-            merged = merged.merge(stats_k)
-            cs_k = self.shards[k].last_cache_stats
-            if cs_k is not None:
-                cache_stats = cs_k if cache_stats is None \
-                    else cache_stats.merge(cs_k)
-            if r_k.size:
-                q_parts.append(np.nonzero(touch[k])[0][q_k])
-                r_parts.append(r_k)
+        hit_shards = 0
+        with obs.span("shard.scatter", queries=b,
+                      shards=self.n_shards) as sp:
+            for k in range(self.n_shards):
+                if not touch[k].any():
+                    continue
+                hit_shards += 1
+                sub = rects[touch[k]]
+                with obs.span("shard.query", shard=k, queries=len(sub)):
+                    q_k, r_k = self.shards[k].query_batch(sub)
+                stats_k = dataclasses.replace(
+                    self.shards[k].last_batch_stats,
+                    queries=int(touch[k].sum()))
+                self.last_shard_stats[k] = stats_k
+                merged = merged.merge(stats_k)
+                cs_k = self.shards[k].last_cache_stats
+                if cs_k is not None:
+                    cache_stats = cs_k if cache_stats is None \
+                        else cache_stats.merge(cs_k)
+                if r_k.size:
+                    q_parts.append(np.nonzero(touch[k])[0][q_k])
+                    r_parts.append(r_k)
+            if sp is not None:
+                sp.args["shards_hit"] = hit_shards
+        reg = obs.get_registry()
+        reg.counter("coax_shard_subqueries_total",
+                    "(rect, shard) pairs dispatched after bbox pruning."
+                    ).inc(int(touch.sum()))
+        reg.counter("coax_shard_subqueries_pruned_total",
+                    "(rect, shard) pairs skipped by bbox pruning."
+                    ).inc(int(touch.size - touch.sum()))
         merged.queries = b
         self.last_batch_stats = merged
         if self._cache_attached:

@@ -1,0 +1,52 @@
+"""Device profiling hooks (DESIGN.md §10.2, profiling layer).
+
+``profile(logdir)`` gates an optional ``jax.profiler`` trace capture
+around a block of device waves — XLA compile/execute timelines land in
+``logdir`` for TensorBoard / Perfetto.  The context is a strict no-op
+(and never raises) when jax is absent, the profiler is unavailable, or
+a capture is already active, so call sites can wrap hot paths
+unconditionally.  The cheap per-wave counters (``transfer_bytes``,
+``dispatches``, ``compile_count``) do NOT live here — they fold into
+the metrics registry from the device plan itself (§10.1).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Iterator, Optional
+
+__all__ = ["profile"]
+
+_active = threading.Lock()    # one capture at a time, process-wide
+
+
+@contextlib.contextmanager
+def profile(logdir: Optional[str], enabled: bool = True) -> Iterator[bool]:
+    """Capture a ``jax.profiler`` trace into ``logdir`` over the block.
+
+    Yields True when a capture actually started (jax importable, no
+    other capture running, ``enabled`` and ``logdir`` truthy), False
+    otherwise — callers may branch on it but never need to."""
+    if not enabled or not logdir:
+        yield False
+        return
+    if not _active.acquire(blocking=False):
+        yield False                       # nested/concurrent: outer wins
+        return
+    started = False
+    try:
+        try:
+            import jax
+            jax.profiler.start_trace(logdir)
+            started = True
+        except Exception:                 # pragma: no cover - no jax
+            pass
+        yield started
+    finally:
+        if started:
+            try:
+                import jax
+                jax.profiler.stop_trace()
+            except Exception:             # pragma: no cover
+                pass
+        _active.release()

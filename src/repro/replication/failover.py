@@ -28,6 +28,7 @@ from typing import List, Optional, Union
 
 import numpy as np
 
+from .. import obs
 from ..core import COAXIndex
 from ..runtime.failure import FaultPlan
 from .replica import Replica, ReplicationError
@@ -186,32 +187,38 @@ class ReplicatedServer:
         else:
             rep = max(candidates, key=lambda r: r.frontier)
 
-        flush = getattr(self.transport, "flush_held", None)
-        if flush is not None:
-            flush(rep.name)                 # the OS delivers its buffers
-        rep.pump()                          # shipped tail + journal catch-up
-        rep.drain_from_disk(self.primary_dir)
-        if rep.frontier < self.acked:
-            raise ReplicationError(
-                f"promotion would lose acknowledged writes: {rep.name} "
-                f"reached {rep.frontier}, last ack at {self.acked}")
+        with obs.span("failover.promote", replica=rep.name) as sp:
+            flush = getattr(self.transport, "flush_held", None)
+            if flush is not None:
+                flush(rep.name)             # the OS delivers its buffers
+            rep.pump()                      # shipped tail + journal catch-up
+            rep.drain_from_disk(self.primary_dir)
+            if rep.frontier < self.acked:
+                raise ReplicationError(
+                    f"promotion would lose acknowledged writes: {rep.name} "
+                    f"reached {rep.frontier}, last ack at {self.acked}")
 
-        self.promotions += 1
-        promoted_dir = self.directory / f"{rep.name}-gen{self.promotions}"
-        rep.index.attach_durability(promoted_dir)
-        self.primary = rep.index
-        self.primary_dir = promoted_dir
-        self.primary_alive = True
-        self.hub = ReplicationHub(rep.index.durable, self.transport,
-                                  plan=self.plan, retries=self._ship_retries,
-                                  backoff=self._ship_backoff)
-        self.replicas = [r for r in self.replicas if r is not rep]
-        for r in self.replicas:
-            r.hub = self.hub
-            self.hub.register(r.name)
-            r.reseed()                      # fresh subscription to the new
-            r.alive = True                  # primary's stream
-        self.acked = self.hub.frontier
+            self.promotions += 1
+            promoted_dir = self.directory / f"{rep.name}-gen{self.promotions}"
+            rep.index.attach_durability(promoted_dir)
+            self.primary = rep.index
+            self.primary_dir = promoted_dir
+            self.primary_alive = True
+            self.hub = ReplicationHub(rep.index.durable, self.transport,
+                                      plan=self.plan,
+                                      retries=self._ship_retries,
+                                      backoff=self._ship_backoff)
+            self.replicas = [r for r in self.replicas if r is not rep]
+            for r in self.replicas:
+                r.hub = self.hub
+                self.hub.register(r.name)
+                r.reseed()                  # fresh subscription to the new
+                r.alive = True              # primary's stream
+            self.acked = self.hub.frontier
+            if sp is not None:
+                sp.args["epoch"], sp.args["seq"] = rep.frontier
+        obs.get_registry().counter(
+            "coax_promotions_total", "Replica-to-primary promotions.").inc()
         return rep
 
     # ------------------------------------------------------------------ #

@@ -32,6 +32,7 @@ import time
 from pathlib import Path
 from typing import Dict, Optional, Tuple
 
+from .. import obs
 from ..core import COAXIndex
 from ..runtime.failure import FaultPlan
 from ..storage.snapshot import latest_snapshot, read_manifest
@@ -166,17 +167,25 @@ class Replica:
         if not self.alive:
             return 0
         applied = 0
-        for data in self.hub.transport.recv(self.name):
-            try:
-                frame = decode_frame(data)
-            except FrameError:
-                self.frames_corrupt += 1    # torn in transit; catch-up repairs
-                continue
-            applied += self._ingest(frame)
-            if not self.alive:
-                return applied
-        if catch_up and self.alive and self.behind():
-            applied += self.catch_up()
+        with obs.span("replica.apply", replica=self.name) as sp:
+            for data in self.hub.transport.recv(self.name):
+                try:
+                    frame = decode_frame(data)
+                except FrameError:
+                    self.frames_corrupt += 1  # torn in transit; catch-up
+                    continue                  # repairs the gap
+                applied += self._ingest(frame)
+                if not self.alive:
+                    break
+            if catch_up and self.alive and self.behind():
+                applied += self.catch_up()
+            if sp is not None:
+                sp.args["applied"] = applied
+        if applied:
+            obs.get_registry().counter(
+                "coax_replica_frames_applied_total",
+                "Frames applied on replicas.", ("replica",)).inc(
+                    applied, replica=self.name)
         return applied
 
     def _ingest(self, frame: Frame) -> int:

@@ -37,6 +37,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from .. import obs
 from ..runtime.failure import FaultPlan, retry
 from ..storage.durability import Durability
 from ..storage.snapshot import pack_state, unpack_state
@@ -143,16 +144,29 @@ class ReplicationHub:
     def _ship(self, dest: str, data: bytes) -> None:
         def _count_retry(attempt, exc):
             self.send_retries += 1
+            obs.get_registry().counter(
+                "coax_ship_retries_total", "Push-side send retries.").inc()
 
-        try:
-            retry(lambda: self.transport.send(dest, data),
-                  retries=self.retries, backoff=self.backoff,
-                  on_error=_count_retry, retryable=(TransportError,))
-        except TransportError:
-            # give up on the push; the replica pulls the gap from the
-            # journal (``fetch``).  The primary's write path never fails
-            # because a replica link is down.
-            self.ship_failures += 1
+        with obs.span("ship.send", dest=dest, nbytes=len(data)) as sp:
+            try:
+                retry(lambda: self.transport.send(dest, data),
+                      retries=self.retries, backoff=self.backoff,
+                      on_error=_count_retry, retryable=(TransportError,))
+            except TransportError:
+                # give up on the push; the replica pulls the gap from the
+                # journal (``fetch``).  The primary's write path never fails
+                # because a replica link is down.
+                self.ship_failures += 1
+                obs.get_registry().counter(
+                    "coax_ship_failures_total",
+                    "Frames abandoned after retry exhaustion.").inc()
+                if sp is not None:
+                    sp.args["failed"] = True
+        reg = obs.get_registry()
+        reg.counter("coax_ship_frames_total",
+                    "Frames pushed to replica links.").inc()
+        reg.counter("coax_ship_bytes_total",
+                    "Encoded frame bytes pushed.").inc(len(data))
 
     def _broadcast(self, frame: Frame) -> bytes:
         data = encode_frame(frame)

@@ -22,7 +22,9 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from .. import obs
 from ..core import COAXIndex, CoaxConfig, full_rect, rect_contains
+from ..obs import MetricsRegistry
 
 __all__ = ["Request", "CoaxRouter"]
 
@@ -58,6 +60,17 @@ class CoaxRouter:
         self._overflow: List[int] = []
         self._tombstones = 0          # admitted rows still in the index
         self._ids = itertools.count()
+        # private registry (DESIGN.md §10.4): stats() delegates here so the
+        # router shares the exposition schema with the serving planes
+        self.metrics = MetricsRegistry()
+        self._c_submits = self.metrics.counter(
+            "coax_router_submits_total", "Requests submitted to the pool.")
+        self._c_admitted = self.metrics.counter(
+            "coax_router_admitted_total", "Requests admitted into batches.")
+        self._c_rebuilds = self.metrics.counter(
+            "coax_router_rebuilds_total", "Lazy index rebuilds.")
+        self._h_admit = self.metrics.histogram(
+            "coax_router_admit_seconds", "Latency of admit() calls.")
 
     # ------------------------------------------------------------------ #
     def submit(self, prompt: np.ndarray, max_new_tokens: int,
@@ -67,6 +80,7 @@ class CoaxRouter:
                       np.asarray(prompt), max_new_tokens, priority)
         self._pool[rid] = req
         self._overflow.append(rid)
+        self._c_submits.inc()
         if len(self._overflow) >= self.rebuild_threshold:
             self._rebuild()
         return rid
@@ -77,6 +91,7 @@ class CoaxRouter:
                          req.priority], np.float32)
 
     def _rebuild(self) -> None:
+        self._c_rebuilds.inc()
         if not self._pool:
             self._index, self._index_rids = None, np.empty(0, np.int64)
             self._overflow = []
@@ -95,6 +110,7 @@ class CoaxRouter:
               min_priority: float = -np.inf,
               max_predicted_decode: float = np.inf) -> List[Request]:
         """Form a batch: range query over the pool, oldest-first."""
+        t0 = time.perf_counter()
         rect = full_rect(len(COLS))
         rect[1] = prompt_len_range
         rect[2, 1] = max_predicted_decode
@@ -122,12 +138,19 @@ class CoaxRouter:
         self._tombstones += len(batch)
         if self._tombstones + len(self._overflow) >= self.rebuild_threshold:
             self._rebuild()
+        self._c_admitted.inc(len(batch))
+        self._h_admit.observe(time.perf_counter() - t0)
         return batch
 
     def __len__(self) -> int:
         return len(self._pool)
 
     def stats(self) -> Dict:
+        """Pool shape plus the registry-backed counters (DESIGN.md §10.4).
+        Pool/index gauges are derived live (they are state, not events);
+        event counts delegate to ``self.metrics`` — the one source of
+        truth shared with ``render_text()`` exposition."""
+        lat = self._h_admit.summary()
         return {
             "pending": len(self._pool),
             "indexed": int(self._index_rids.size),
@@ -136,4 +159,9 @@ class CoaxRouter:
             "index_groups": [
                 (g.predictor, list(g.dependents)) for g in self._index.groups
             ] if self._index else [],
+            "submits": self._c_submits.value(),
+            "admitted": self._c_admitted.value(),
+            "rebuilds": self._c_rebuilds.value(),
+            "admit_p50_ms": lat["p50"] * 1e3,
+            "admit_p99_ms": lat["p99"] * 1e3,
         }

@@ -46,6 +46,7 @@ from typing import List, Optional, Union
 
 import numpy as np
 
+from .. import obs
 from ..core import COAXIndex
 from . import atomic
 from .snapshot import (MANIFEST_NAME, SNAPSHOT_PREFIX, latest_snapshot,
@@ -186,25 +187,30 @@ class Durability:
         republishes the rotated state in one crash-safe pass at the end."""
         if self._replaying:
             return
-        self._record_snapshot(
-            write_snapshot(index, self.directory, wal_seq=0, keep=self.keep), 0)
-        old = self.wal
-        self.wal = self._open_wal(wal_path(self.directory, index.epoch),
-                                  index.epoch, start_seq=0)
-        if old is not None:
-            old.close()
-        if self.rotate_observer is not None:
-            # mid-rotation ship point (§8.2): the new epoch pair is live on
-            # disk, the old WALs are not yet deleted — a crash raised from
-            # the observer models "primary died mid-compaction-rotation"
-            self.rotate_observer(old.epoch if old is not None else index.epoch - 1,
-                                 old.next_seq if old is not None else 0,
-                                 index.epoch,
-                                 bool(getattr(index, "_last_compact_relearned",
-                                              False)))
-        for p in _wal_files(self.directory):
-            if p != self.wal.path:
-                p.unlink(missing_ok=True)
+        with obs.span("wal.rotate", epoch=index.epoch, mode="sync"):
+            self._record_snapshot(
+                write_snapshot(index, self.directory, wal_seq=0,
+                               keep=self.keep), 0)
+            old = self.wal
+            self.wal = self._open_wal(wal_path(self.directory, index.epoch),
+                                      index.epoch, start_seq=0)
+            if old is not None:
+                old.close()
+            if self.rotate_observer is not None:
+                # mid-rotation ship point (§8.2): the new epoch pair is live
+                # on disk, the old WALs are not yet deleted — a crash raised
+                # from the observer models "primary died mid-rotation"
+                self.rotate_observer(
+                    old.epoch if old is not None else index.epoch - 1,
+                    old.next_seq if old is not None else 0,
+                    index.epoch,
+                    bool(getattr(index, "_last_compact_relearned", False)))
+            for p in _wal_files(self.directory):
+                if p != self.wal.path:
+                    p.unlink(missing_ok=True)
+        obs.get_registry().counter(
+            "coax_wal_rotations_total", "WAL epoch rotations.",
+            ("mode",)).inc(mode="sync")
 
     def handoff_rotate(self, index: COAXIndex, replay_tail,
                        relearned: bool) -> None:
@@ -232,30 +238,35 @@ class Durability:
         handoffs cannot happen (replay forces synchronous compaction)."""
         if self._replaying:            # defensive: replay is sync-only
             return
-        old = self.wal
-        fresh = wal_path(self.directory, index.epoch)
-        fresh.unlink(missing_ok=True)  # torn leftovers of a crashed handoff
-        self.wal = self._open_wal(fresh, index.epoch, start_seq=0)
-        self._suppress_ship = True
-        try:
-            replay_tail()
-        finally:
-            self._suppress_ship = False
-        self.wal.sync()
-        if old is not None:
-            old.close()
-        self._record_snapshot(
-            write_snapshot(index, self.directory,
-                           wal_seq=self.wal.next_seq, keep=self.keep),
-            self.wal.next_seq)
-        if self.rotate_observer is not None:
-            # same mid-rotation ship point as ``on_compact`` (§8.2)
-            self.rotate_observer(old.epoch if old is not None else index.epoch - 1,
-                                 old.next_seq if old is not None else 0,
-                                 index.epoch, bool(relearned))
-        for p in _wal_files(self.directory):
-            if p != self.wal.path:
-                p.unlink(missing_ok=True)
+        with obs.span("wal.rotate", epoch=index.epoch, mode="handoff"):
+            old = self.wal
+            fresh = wal_path(self.directory, index.epoch)
+            fresh.unlink(missing_ok=True)  # torn leftovers of a crashed
+            self.wal = self._open_wal(fresh, index.epoch, start_seq=0)
+            self._suppress_ship = True
+            try:
+                replay_tail()
+            finally:
+                self._suppress_ship = False
+            self.wal.sync()
+            if old is not None:
+                old.close()
+            self._record_snapshot(
+                write_snapshot(index, self.directory,
+                               wal_seq=self.wal.next_seq, keep=self.keep),
+                self.wal.next_seq)
+            if self.rotate_observer is not None:
+                # same mid-rotation ship point as ``on_compact`` (§8.2)
+                self.rotate_observer(
+                    old.epoch if old is not None else index.epoch - 1,
+                    old.next_seq if old is not None else 0,
+                    index.epoch, bool(relearned))
+            for p in _wal_files(self.directory):
+                if p != self.wal.path:
+                    p.unlink(missing_ok=True)
+        obs.get_registry().counter(
+            "coax_wal_rotations_total", "WAL epoch rotations.",
+            ("mode",)).inc(mode="handoff")
 
     def finish_replay(self, tail_records) -> None:
         """Deferred rotation after a replay that crossed >=1 compaction
@@ -315,8 +326,11 @@ class Durability:
                 and self.last_snapshot_wal_seq == seq
                 and self.last_snapshot_path.exists()):
             return self.last_snapshot_path    # nothing new to absorb
-        path = write_snapshot(self.index, self.directory, wal_seq=seq,
-                              keep=self.keep if keep is None else keep)
+        with obs.span("durability.checkpoint", wal_seq=seq):
+            path = write_snapshot(self.index, self.directory, wal_seq=seq,
+                                  keep=self.keep if keep is None else keep)
+        obs.get_registry().counter(
+            "coax_checkpoints_total", "Mid-epoch checkpoint snapshots.").inc()
         self._record_snapshot(path, seq)
         return path
 

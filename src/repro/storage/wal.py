@@ -41,11 +41,14 @@ from __future__ import annotations
 import dataclasses
 import os
 import struct
+import time
 import zlib
 from pathlib import Path
 from typing import Iterator, List, Optional, Tuple, Union
 
 import numpy as np
+
+from .. import obs
 
 __all__ = ["WalRecord", "WriteAheadLog", "WalFrameCursor", "read_wal",
            "wal_path", "decode_record", "OP_INSERT", "OP_DELETE"]
@@ -134,12 +137,18 @@ class WriteAheadLog:
     def _append(self, kind: int, payload: bytes) -> int:
         hdr = _REC_HDR.pack(_REC_MAGIC, self.next_seq, kind, len(payload),
                             zlib.crc32(payload) & 0xFFFFFFFF)
-        self._f.write(hdr)
-        self._f.write(payload)
-        self._f.flush()                 # reaches the OS; fsync is sync()'s job
+        with obs.span("wal.append", seq=self.next_seq, kind=kind,
+                      nbytes=len(hdr) + len(payload)):
+            self._f.write(hdr)
+            self._f.write(payload)
+            self._f.flush()             # reaches the OS; fsync is sync()'s job
         self.next_seq += 1
         self.pending_bytes += len(hdr) + len(payload)
         self.pending_records += 1
+        g = obs.get_registry()
+        g.counter("coax_wal_appends_total", "WAL records appended").inc()
+        g.counter("coax_wal_bytes_total", "WAL bytes appended").inc(
+            len(hdr) + len(payload))
         if self.observer is not None:   # ship AFTER the journal has the record
             self.observer(self.epoch, self.next_seq - 1, kind, payload)
         return self.next_seq - 1
@@ -159,8 +168,17 @@ class WriteAheadLog:
         (orderly ``close``) or lost the handle to a failed rotation — both
         cases where raising from a cleanup path helps nobody."""
         if self.pending_bytes and not self._f.closed:
-            self._f.flush()
-            os.fsync(self._f.fileno())
+            t0 = time.perf_counter()
+            with obs.span("wal.fsync", nbytes=self.pending_bytes):
+                self._f.flush()
+                os.fsync(self._f.fileno())
+            g = obs.get_registry()
+            g.counter("coax_wal_fsync_total", "WAL fsyncs").inc()
+            g.histogram("coax_wal_fsync_seconds",
+                        "WAL tail fsync latency").observe(
+                            time.perf_counter() - t0)
+            obs.stage_hist().observe(time.perf_counter() - t0,
+                                     stage="fsync", backend="numpy")
             self.pending_bytes = 0
             self.pending_records = 0
 
